@@ -1,0 +1,37 @@
+"""Fig. 9 — auto-tuning compaction triggers: iterations of threshold search
+vs end-to-end duration, for small-file-count and entropy triggers, on
+read-heavy (TPC-DS-WP1-like: benefits from compaction) and write-heavy
+(TPC-H-like: compaction can be a net loss) profiles."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.workload_sim import run_sim
+from repro.core.autotune import tune_threshold
+
+
+def main(hours: int = 3) -> List[str]:
+    rows = []
+    for profile in ("read_heavy", "write_heavy"):
+        for trig, (lo, hi) in (("small_files", (50, 2000)),
+                               ("entropy", (0.5, 6.0))):
+            def objective(thr: float) -> float:
+                return run_sim(strategy="table-10", trigger=trig,
+                               threshold=thr, hours=hours, seed=3,
+                               profile=profile)["duration_s"]
+
+            res = tune_threshold(objective, lo, hi, coarse=3, refine_rounds=1)
+            base = run_sim(strategy="none", hours=hours, seed=3,
+                           profile=profile)["duration_s"]
+            hist = "|".join(f"{t:.1f}:{d:.1f}" for t, d in res.history)
+            rows.append(
+                f"fig9_autotune[{profile};{trig}],{res.best_objective:.1f},"
+                f"best_thr={res.best_threshold:.1f};no_comp={base:.1f};"
+                f"iters={hist}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,40 @@
+"""Fig. 6 — compaction strategy impact on file count over time.
+
+Strategies: no compaction, table-10, hybrid-50, hybrid-500; hourly periodic
+trigger; MOOP weights 0.7/0.3 (the paper's OpenHouse deployment settings).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.workload_sim import run_sim
+
+STRATEGIES = ("none", "table-10", "hybrid-50", "hybrid-500")
+
+
+def run(hours: int = 5, seed: int = 0) -> Dict[str, List[int]]:
+    out = {}
+    for strat in STRATEGIES:
+        res = run_sim(strategy=strat, hours=hours, seed=seed)
+        out[strat] = [r["file_count"] for r in res["hourly"]]
+    return out
+
+
+def main(hours: int = 5) -> List[str]:
+    rows = []
+    series = run(hours=hours)
+    for strat, counts in series.items():
+        rows.append(f"fig6_file_count[{strat}],{counts[-1]},"
+                    f"trajectory={'|'.join(map(str, counts))}")
+    none_final = series["none"][-1]
+    for strat in STRATEGIES[1:]:
+        red = 1 - series[strat][-1] / none_final
+        rows.append(f"fig6_reduction_vs_none[{strat}],{red:.3f},"
+                    f"final={series[strat][-1]}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

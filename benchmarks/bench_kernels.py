@@ -1,0 +1,85 @@
+"""Kernel microbenchmarks (interpret-mode correctness + host timing) and the
+RewriteBytesPerHour calibration for the GBHr cost trait (§4.2): measured
+throughput of the compact_pack merge path on this host feeds the cost model
+the simulations use."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time_us(fn, *args, iters=3) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> List[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # compact_pack: oracle timing at realistic size (kernel timing in
+    # interpret mode is not meaningful for throughput; oracle == same math)
+    from repro.kernels.compact_pack import compact_chunks, plan_compaction
+    from repro.kernels.compact_pack.compact_pack import CHUNK_TOKENS
+    n_chunks = 2048
+    src = jax.random.randint(key, (n_chunks * CHUNK_TOKENS,), 0, 1 << 30,
+                             dtype=jnp.int32)
+    cm = plan_compaction([64] * (n_chunks // 64),
+                         fragment_order=list(reversed(range(n_chunks // 64))))
+    us = _time_us(lambda s: compact_chunks(s, cm, use_ref=True), src)
+    byts = n_chunks * CHUNK_TOKENS * 4
+    bph = byts / (us / 1e6) * 3600
+    rows.append(f"kernel_compact_pack_ref,{us:.0f},"
+                f"bytes={byts};rewrite_bytes_per_hour={bph:.3e}")
+    usk = _time_us(lambda s: compact_chunks(s, cm), src)
+    rows.append(f"kernel_compact_pack_interpret,{usk:.0f},correctness_path")
+
+    # flash attention: kernel-vs-ref correctness scale + host us
+    from repro.kernels.flash_attn import flash_attention
+    q = jax.random.normal(key, (1, 4, 512, 64), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(key, (1, 2, 512, 64), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(key, (1, 2, 512, 64), jnp.float32).astype(jnp.bfloat16)
+    us_ref = _time_us(lambda a, b, c: flash_attention(a, b, c, use_ref=True),
+                      q, k, v)
+    us_k = _time_us(lambda a, b, c: flash_attention(a, b, c, block_q=128,
+                                                    block_k=128), q, k, v)
+    rows.append(f"kernel_flash_attn_ref,{us_ref:.0f},B1H4S512D64")
+    rows.append(f"kernel_flash_attn_interpret,{us_k:.0f},B1H4S512D64")
+
+    # decode attention
+    from repro.kernels.decode_attn import decode_attention
+    qd = jax.random.normal(key, (4, 8, 64), jnp.float32).astype(jnp.bfloat16)
+    kc = jax.random.normal(key, (4, 2048, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    vc = jax.random.normal(key, (4, 2048, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    lens = jnp.array([2048, 1024, 512, 100], jnp.int32)
+    us_ref = _time_us(lambda a, b, c, l: decode_attention(a, b, c, l,
+                                                          use_ref=True),
+                      qd, kc, vc, lens)
+    us_k = _time_us(lambda a, b, c, l: decode_attention(a, b, c, l,
+                                                        block_k=512),
+                    qd, kc, vc, lens)
+    rows.append(f"kernel_decode_attn_ref,{us_ref:.0f},B4S2048")
+    rows.append(f"kernel_decode_attn_interpret,{us_k:.0f},B4S2048")
+
+    # rmsnorm
+    from repro.kernels.rmsnorm import rmsnorm
+    x = jax.random.normal(key, (4096, 1024), jnp.float32).astype(jnp.bfloat16)
+    sc = jnp.ones((1024,), jnp.bfloat16)
+    us_ref = _time_us(lambda a, b: rmsnorm(a, b, use_ref=True), x, sc)
+    us_k = _time_us(lambda a, b: rmsnorm(a, b), x, sc)
+    rows.append(f"kernel_rmsnorm_ref,{us_ref:.0f},R4096D1024")
+    rows.append(f"kernel_rmsnorm_interpret,{us_k:.0f},R4096D1024")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,32 @@
+"""Fig. 8 — impact of compaction on query latency (read p50/p95 per hour,
+no-compaction vs table-10 vs hybrid-500). Latency comes from the metered
+scan-planning + per-file-open cost model calibrated on the real data
+pipeline (bench_pipeline_latency measures the real thing end-to-end)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.workload_sim import run_sim
+
+STRATEGIES = ("none", "table-10", "hybrid-500")
+
+
+def main(hours: int = 5) -> List[str]:
+    rows = []
+    for strat in STRATEGIES:
+        res = run_sim(strategy=strat, hours=hours, seed=0)
+        p50 = "|".join(f"{r['lat_p50']*1e3:.0f}" for r in res["hourly"])
+        p95 = "|".join(f"{r['lat_p95']*1e3:.0f}" for r in res["hourly"])
+        rows.append(f"fig8_read_p50_ms[{strat}],"
+                    f"{res['hourly'][-1]['lat_p50']*1e3:.1f},hourly={p50}")
+        rows.append(f"fig8_read_p95_ms[{strat}],"
+                    f"{res['hourly'][-1]['lat_p95']*1e3:.1f},hourly={p95}")
+        rows.append(f"fig8_duration_s[{strat}],{res['duration_s']:.1f},"
+                    f"files={res['final_file_count']}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

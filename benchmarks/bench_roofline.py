@@ -1,0 +1,47 @@
+"""§Roofline table emitter: reads the dry-run JSON records (experiments/
+dryrun/) and prints one row per (arch x shape x mesh) cell with the three
+terms, the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPS."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+
+def load(outdir: str = "experiments/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main() -> List[str]:
+    rows = []
+    ok = skip = 0
+    for r in load():
+        tag = f"{r['arch']};{r['shape']};{r['mesh']}"
+        if r.get("status") == "skip":
+            skip += 1
+            rows.append(f"roofline[{tag}],skip,{r['skip_reason']}")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"roofline[{tag}],ERROR,{r.get('error','')[:80]}")
+            continue
+        ok += 1
+        rf = r["roofline"]
+        rows.append(
+            f"roofline[{tag}],{rf['roofline_fraction']:.4f},"
+            f"dom={rf['dominant'].replace('_s','')};"
+            f"compute={rf['compute_s']:.4f};mem={rf['memory_s']:.4f};"
+            f"coll={rf['collective_s']:.4f};"
+            f"useful_ratio={rf['useful_flops_ratio']:.3f}")
+    rows.append(f"roofline_cells,{ok},skips={skip}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,60 @@
+"""Benchmark aggregator: one suite per paper table/figure plus the roofline
+table. Prints ``name,value,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer simulated hours")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    hours = 3 if args.quick else 5
+
+    from benchmarks import (bench_autotune, bench_compaction_cost,
+                            bench_conflicts, bench_file_count, bench_fleet,
+                            bench_hist, bench_kernels,
+                            bench_pipeline_latency, bench_query_latency,
+                            bench_roofline)
+
+    suites = [
+        ("fig1_fig2_size_distribution", lambda: bench_hist.main()),
+        ("fig3_query_vs_maintenance", lambda: bench_pipeline_latency.main()),
+        ("fig6_file_count", lambda: bench_file_count.main(hours)),
+        ("fig7_compaction_cost", lambda: bench_compaction_cost.main(hours)),
+        ("fig8_query_latency", lambda: bench_query_latency.main(hours)),
+        ("table1_conflicts", lambda: bench_conflicts.main(hours)),
+        ("fig9_autotune", lambda: bench_autotune.main(max(2, hours - 2))),
+        ("fig10_fleet", lambda: bench_fleet.main()),
+        ("kernels", lambda: bench_kernels.main()),
+        ("roofline", lambda: bench_roofline.main()),
+    ]
+    print("name,value,derived")
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row)
+            print(f"suite[{name}],{time.time()-t0:.1f}s,ok")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            import traceback
+            traceback.print_exc()
+            print(f"suite[{name}],FAILED,{e!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Render the EXPERIMENTS.md §Dry-run + §Roofline tables from the JSON
+records in experiments/dryrun (baseline) and experiments/perf (variants)."""
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def load(d):
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(HERE, d, "*.json"))):
+        r = json.load(open(p))
+        recs[os.path.basename(p)[:-5]] = r
+    return recs
+
+
+def fmt_mem(m):
+    if not m or m.get("temp_size_in_bytes") is None:
+        return "-"
+    return f"{(m['temp_size_in_bytes'] or 0)/2**30:.1f}"
+
+
+def roofline_table():
+    recs = load("dryrun")
+    lines = ["| arch | shape | mesh | compute_s | memory_s | collective_s |"
+             " dominant | MODEL/HLO | frac | temp GiB/dev |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    order = sorted(recs.values(), key=lambda r: (r["arch"], r["shape"],
+                                                 r["mesh"]))
+    for r in order:
+        if r.get("status") == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                         f" skip | — | — | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                         f" ERROR | | | | | | |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+            f" {rf['compute_s']:.4f} | {rf['memory_s']:.4f} |"
+            f" {rf['collective_s']:.4f} | {rf['dominant'].replace('_s','')} |"
+            f" {rf['useful_flops_ratio']:.3f} |"
+            f" {rf['roofline_fraction']:.4f} |"
+            f" {fmt_mem(r.get('memory_analysis'))} |")
+    return "\n".join(lines)
+
+
+def perf_table():
+    recs = load("perf")
+    lines = ["| cell | mesh | variant | compute_s | memory_s |"
+             " collective_s | dominant | frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for name, r in sorted(recs.items()):
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        variant = name.split("__")[-1] if name.count("__") >= 3 else "baseline"
+        lines.append(
+            f"| {r['arch']}/{r['shape']} | {r['mesh']} | {variant} |"
+            f" {rf['compute_s']:.4f} | {rf['memory_s']:.4f} |"
+            f" {rf['collective_s']:.4f} | {rf['dominant'].replace('_s','')} |"
+            f" {rf['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## Roofline (baseline, both meshes)\n")
+    print(roofline_table())
+    print("\n## Perf variants\n")
+    print(perf_table())

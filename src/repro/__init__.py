@@ -1,0 +1,15 @@
+"""repro: AutoComp-managed multi-pod JAX training/inference framework.
+
+Layers:
+  repro.lst      -- log-structured table substrate (Iceberg-semantics)
+  repro.core     -- AutoComp: the paper's OODA compaction framework
+  repro.data     -- tokenized data pipeline stored on LSTs
+  repro.models   -- the 10 assigned architectures
+  repro.kernels  -- Pallas TPU kernels (interpret-validated on CPU)
+  repro.dist     -- mesh / logical sharding rules / collectives
+  repro.train    -- optimizer, train/serve steps, checkpoints, runner
+  repro.launch   -- mesh factory, multi-pod dry-run, train/serve drivers
+  repro.configs  -- architecture configs + input shapes
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,132 @@
+"""Assigned input-shape sets and ShapeDtypeStruct stand-ins for the dry-run.
+
+Every (arch x shape) cell is defined here; ``applicable()`` encodes the
+documented skips (encoder-only archs have no decode step; full-attention
+archs skip long_500k). ``input_specs()`` returns weak-type-correct,
+shardable ShapeDtypeStructs — no device allocation ever happens for the
+full-size configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str              # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+    microbatches: int = 1  # train only: gradient-accumulation steps
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256, microbatches=8),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+SHAPE_IDS = tuple(SHAPES)
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return False, "encoder-only arch: no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 524k decode needs sub-quadratic attention"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Logical axes for each batch leaf (for input shardings)."""
+    b = _token_batch_axes(cfg, shape)
+    return b
+
+
+def _token_batch_axes(cfg, shape):
+    ax: Dict[str, Any] = {}
+    if shape.kind == "train":
+        if cfg.frontend == "audio_frames":
+            ax["frames"] = ("batch", "seq", None)
+            ax["mask"] = ("batch", "seq")
+        else:
+            ax["tokens"] = ("batch", "seq")
+        if cfg.frontend == "vit_patches":
+            ax["patches"] = ("batch", None, None)
+        ax["labels"] = ("batch", "seq")
+    elif shape.kind == "prefill":
+        if cfg.frontend == "audio_frames":
+            ax["frames"] = ("batch", "seq", None)
+        else:
+            ax["tokens"] = ("batch", "seq")
+        if cfg.frontend == "vit_patches":
+            ax["patches"] = ("batch", None, None)
+    else:  # decode
+        ax["tokens"] = ("batch", None)
+        ax["pos"] = ()
+    return ax
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec
+                ) -> Tuple[Dict[str, Any], Optional[Any]]:
+    """(batch SDS dict, cache SDS pytree or None) for one cell."""
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape.name}: {why}")
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    cache = None
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio_frames":
+            batch["frames"] = _sds((b, s, transformer.AUDIO_HIDDEN), jnp.bfloat16)
+        elif cfg.frontend == "vit_patches":
+            batch["tokens"] = _sds((b, s - cfg.n_vision_tokens), jnp.int32)
+            batch["patches"] = _sds((b, cfg.n_vision_tokens,
+                                     transformer.VIT_HIDDEN), jnp.bfloat16)
+        else:
+            batch["tokens"] = _sds((b, s), jnp.int32)
+        if shape.kind == "train":
+            lab_len = s if cfg.frontend != "vit_patches" else s - cfg.n_vision_tokens
+            batch["labels"] = _sds((b, lab_len), jnp.int32)
+            if cfg.frontend == "audio_frames":
+                batch["mask"] = _sds((b, s), jnp.bool_)
+    else:  # decode: one new token against a cache of seq_len
+        batch["tokens"] = _sds((b, 1), jnp.int32)
+        batch["pos"] = _sds((), jnp.int32)
+        cache = transformer.abstract_cache(cfg, b, s)
+    return batch, cache
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, key) -> Dict[str, Any]:
+    """Materialize a random batch matching input_specs (smoke/e2e use)."""
+    specs, cache = input_specs(cfg, shape)
+    ks = jax.random.split(key, len(specs))
+    out = {}
+    for k_rng, (name, sds) in zip(ks, sorted(specs.items())):
+        if sds.dtype == jnp.int32 and name in ("tokens", "labels"):
+            out[name] = jax.random.randint(k_rng, sds.shape, 0, cfg.vocab,
+                                           dtype=jnp.int32)
+        elif sds.dtype == jnp.int32:
+            out[name] = jnp.zeros(sds.shape, jnp.int32) + (shape.seq_len - 1)
+        elif sds.dtype == jnp.bool_:
+            out[name] = jax.random.bernoulli(k_rng, 0.3, sds.shape)
+        else:
+            out[name] = jax.random.normal(k_rng, sds.shape, jnp.float32) \
+                .astype(sds.dtype)
+    if cache is not None:
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache)
+    return out, cache

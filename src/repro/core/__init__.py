@@ -1,0 +1,23 @@
+"""AutoComp: automated data compaction for log-structured tables (the
+paper's contribution), structured as the OODA workflow of Fig. 4:
+
+  candidates -> [observe: stats] -> (filter) -> [orient: traits] -> (filter)
+             -> [decide: rank + select] -> [act: schedule + execute]
+             -> feedback loop back to observe
+
+Every phase is a pluggable component (NFR1) and every default implementation
+is deterministic under identical inputs (NFR2). Nothing here knows about
+Iceberg vs. our LST substrate beyond the connector protocol (NFR3).
+"""
+
+from repro.core.model import Candidate, CandidateStats, Scope  # noqa: F401
+from repro.core.observe import StatsCollector  # noqa: F401
+from repro.core.orient import (  # noqa: F401
+    ComputeCostTrait, FileCountReductionTrait, FileEntropyTrait, TraitContext,
+)
+from repro.core.decide import (  # noqa: F401
+    MoopRanker, ThresholdPolicy, quota_adaptive_weights, select_budget,
+    select_topk,
+)
+from repro.core.ooda import AutoCompPipeline, CycleReport  # noqa: F401
+from repro.core.service import AutoCompService  # noqa: F401

@@ -1,0 +1,108 @@
+"""Act phase (§4.4): schedule and execute selected compaction candidates.
+
+Scheduling policies learned from the paper's deployment:
+  * parallel across tables, sequential within a table (concurrent compaction
+    of distinct partitions of one table conflicts under Iceberg v1.2);
+  * optional off-peak window;
+  * per-task retry with fresh snapshot basis on conflict;
+  * can run on a dedicated "compaction cluster" (here: a worker pool
+    decoupled from the training/query path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.model import Candidate, Scope
+from repro.lst import compaction as comp
+from repro.lst.compaction import CompactionResult, CompactionTask
+
+
+@dataclasses.dataclass
+class ActReport:
+    results: List[CompactionResult] = dataclasses.field(default_factory=list)
+
+    @property
+    def files_removed(self) -> int:
+        return sum(r.files_removed for r in self.results)
+
+    @property
+    def files_added(self) -> int:
+        return sum(r.files_added for r in self.results)
+
+    @property
+    def bytes_rewritten(self) -> int:
+        return sum(r.bytes_rewritten for r in self.results)
+
+    @property
+    def gbhr(self) -> float:
+        return sum(r.gbhr for r in self.results)
+
+    @property
+    def conflicts(self) -> int:
+        return sum(1 for r in self.results if r.conflict)
+
+    @property
+    def failures(self) -> int:
+        return sum(1 for r in self.results if not r.success)
+
+
+class Scheduler:
+    def __init__(self, target_file_bytes: int,
+                 merge_fn: Callable = comp.default_merge_fn,
+                 executor_memory_gb: float = 8.0,
+                 rewrite_bytes_per_hour: float = 256e9,
+                 offpeak_window: Optional[Callable[[], bool]] = None,
+                 max_retries: int = 2,
+                 fail_fn: Optional[Callable] = None,
+                 interleave_fn: Optional[Callable] = None) -> None:
+        self.target = target_file_bytes
+        self.merge_fn = merge_fn
+        self.executor_memory_gb = executor_memory_gb
+        self.rewrite_bytes_per_hour = rewrite_bytes_per_hour
+        self.offpeak_window = offpeak_window
+        self.max_retries = max_retries
+        self.fail_fn = fail_fn
+        self.interleave_fn = interleave_fn  # concurrent-writer injection
+
+    def plan(self, cand: Candidate) -> List[CompactionTask]:
+        scope = "partition" if cand.scope == Scope.PARTITION else "table"
+        tasks = comp.plan_table(cand.table, self.target, scope=scope)
+        if cand.scope == Scope.PARTITION and cand.partition is not None:
+            tasks = [t for t in tasks
+                     if (t.scope or "") == (cand.partition or "")]
+        return tasks
+
+    def execute(self, selected: Sequence[Candidate]) -> ActReport:
+        """Tables are independent units (parallelizable); within a table,
+        tasks run sequentially to avoid LST conflicts (§4.4/§6)."""
+        report = ActReport()
+        if self.offpeak_window is not None and not self.offpeak_window():
+            return report
+        by_table: Dict[str, List[Candidate]] = {}
+        for c in selected:
+            by_table.setdefault(c.table.table_id, []).append(c)
+        for table_id in sorted(by_table):
+            for cand in by_table[table_id]:
+                tasks = self.plan(cand)
+                if cand.scope != Scope.PARTITION:
+                    # table scope: one commit for the whole rewrite job
+                    res = comp.execute_tasks_atomic(
+                        cand.table, tasks, merge_fn=self.merge_fn,
+                        max_retries=self.max_retries,
+                        executor_memory_gb=self.executor_memory_gb,
+                        rewrite_bytes_per_hour=self.rewrite_bytes_per_hour,
+                        interleave_fn=self.interleave_fn)
+                    report.results.append(res)
+                    continue
+                for task in tasks:      # partition scope: per-partition commit
+                    res = comp.execute_task(
+                        cand.table, task, merge_fn=self.merge_fn,
+                        max_retries=self.max_retries,
+                        executor_memory_gb=self.executor_memory_gb,
+                        rewrite_bytes_per_hour=self.rewrite_bytes_per_hour,
+                        fail_fn=self.fail_fn,
+                        interleave_fn=self.interleave_fn)
+                    report.results.append(res)
+        return report

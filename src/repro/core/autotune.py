@@ -1,0 +1,72 @@
+"""Auto-tuning of compaction triggers (§6.3): iteratively refine trigger
+thresholds against an end-to-end workload objective.
+
+The paper uses MLOS+FLAML; this is a dependency-free deterministic stand-in
+with the same interface: propose -> evaluate(threshold) -> observe duration.
+Strategy: coarse grid sweep, then successive halving around the incumbent
+(golden-section-flavored local refinement).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class TuneResult:
+    history: List[Tuple[float, float]]      # (threshold, objective)
+    best_threshold: float
+    best_objective: float
+    iterations: int
+
+
+def tune_threshold(evaluate: Callable[[float], float],
+                   lo: float, hi: float,
+                   coarse: int = 5, refine_rounds: int = 3,
+                   minimize: bool = True) -> TuneResult:
+    """Tune a single trigger threshold in [lo, hi].
+
+    ``evaluate`` runs the workload under the threshold and returns the
+    end-to-end duration (the y-axis of Fig. 9). Deterministic: same
+    evaluate -> same result.
+    """
+    sign = 1.0 if minimize else -1.0
+    history: List[Tuple[float, float]] = []
+
+    def ev(x: float) -> float:
+        y = evaluate(x)
+        history.append((x, y))
+        return sign * y
+
+    # coarse grid
+    grid = [lo + (hi - lo) * i / (coarse - 1) for i in range(coarse)]
+    scores = [(ev(x), x) for x in grid]
+    best_s, best_x = min(scores)
+
+    # successive halving around incumbent
+    span = (hi - lo) / (coarse - 1)
+    for _ in range(refine_rounds):
+        span /= 2
+        for cand in (best_x - span, best_x + span):
+            if lo <= cand <= hi:
+                s = ev(cand)
+                if s < best_s:
+                    best_s, best_x = s, cand
+    return TuneResult(history=history, best_threshold=best_x,
+                      best_objective=sign * best_s, iterations=len(history))
+
+
+def tune_weights(evaluate: Callable[[Dict[str, float]], float],
+                 benefit_trait: str, cost_trait: str,
+                 grid: Sequence[float] = (0.3, 0.5, 0.7, 0.9),
+                 minimize: bool = True) -> Tuple[Dict[str, float], float]:
+    """Sweep the MOOP benefit weight w1 (w2 = 1 - w1)."""
+    sign = 1.0 if minimize else -1.0
+    best = None
+    for w1 in grid:
+        w = {benefit_trait: w1, cost_trait: 1.0 - w1}
+        y = sign * evaluate(w)
+        if best is None or y < best[1]:
+            best = (w, y)
+    return best[0], sign * best[1]

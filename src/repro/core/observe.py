@@ -1,0 +1,63 @@
+"""Observe phase (§3.3/§4.1): extract statistics for each candidate.
+
+The standardized stats layout supports generic metrics (file counts/sizes)
+plus platform-specific custom metrics injected through ``custom_fns`` —
+e.g. access frequency from the data-pipeline reader, or checkpoint age from
+the training runner.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Iterable, List, Optional
+
+from repro.core.model import Candidate, CandidateStats
+
+BUCKETS = 16  # power-of-two size buckets starting at 1 MiB
+
+
+def size_bucket(size_bytes: int) -> int:
+    mb = max(size_bytes / (1 << 20), 1e-6)
+    b = int(math.floor(math.log2(mb))) + 1 if mb >= 1 else 0
+    return min(max(b, 0), BUCKETS - 1)
+
+
+class StatsCollector:
+    def __init__(self, target_file_bytes: int,
+                 custom_fns: Optional[Dict[str, Callable]] = None) -> None:
+        self.target = target_file_bytes
+        self.custom_fns = custom_fns or {}
+
+    def observe(self, cand: Candidate) -> CandidateStats:
+        files = cand.files()
+        hist = [0] * BUCKETS
+        small = 0
+        small_bytes = 0
+        total = 0
+        for f in files:
+            hist[size_bucket(f.size_bytes)] += 1
+            total += f.size_bytes
+            if f.size_bytes < self.target:
+                small += 1
+                small_bytes += f.size_bytes
+        stats = CandidateStats(
+            file_count=len(files),
+            total_bytes=total,
+            small_file_count=small,
+            small_bytes=small_bytes,
+            size_histogram=tuple(hist),
+            partition_count=len({f.partition for f in files}),
+            created_at=cand.table.meta.created_at,
+            last_write_at=cand.table.meta.last_write_at,
+        )
+        for name, fn in self.custom_fns.items():
+            stats.custom[name] = fn(cand)
+        cand.stats = stats
+        return stats
+
+    def observe_all(self, cands: Iterable[Candidate]) -> List[Candidate]:
+        out = []
+        for c in cands:
+            self.observe(c)
+            out.append(c)
+        return out

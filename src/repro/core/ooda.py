@@ -1,0 +1,120 @@
+"""The OODA pipeline (Fig. 4): one configurable object wiring candidates ->
+observe -> filters -> orient -> filters -> decide -> act -> feedback.
+
+``run_cycle`` is deterministic given the catalog state (NFR2) and returns a
+CycleReport with everything the benchmarks plot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core import filters as filt
+from repro.core.act import ActReport, Scheduler
+from repro.core.decide import MoopRanker, select_budget, select_topk
+from repro.core.model import Candidate, Scope, generate_candidates
+from repro.core.observe import StatsCollector
+from repro.core.orient import TraitContext, compute_traits
+from repro.lst.catalog import Catalog
+
+
+@dataclasses.dataclass
+class CycleReport:
+    n_candidates: int = 0
+    n_after_filters: int = 0
+    n_selected: int = 0
+    selected_keys: List = dataclasses.field(default_factory=list)
+    act: Optional[ActReport] = None
+    wall_s: float = 0.0
+
+    @property
+    def files_removed(self) -> int:
+        return self.act.files_removed if self.act else 0
+
+    @property
+    def gbhr(self) -> float:
+        return self.act.gbhr if self.act else 0.0
+
+
+class AutoCompPipeline:
+    def __init__(self,
+                 stats: StatsCollector,
+                 traits: Sequence,
+                 trait_ctx: TraitContext,
+                 ranker: MoopRanker,
+                 scheduler: Scheduler,
+                 scope: Scope = Scope.TABLE,
+                 hybrid: bool = False,
+                 pre_filters: Sequence = (),
+                 post_filters: Sequence = (),
+                 top_k: Optional[int] = 10,
+                 budget_gbhr: Optional[float] = None,
+                 weights_fn: Optional[Callable[[Candidate], Dict[str, float]]] = None,
+                 feedback_fn: Optional[Callable] = None) -> None:
+        self.stats = stats
+        self.traits = traits
+        self.trait_ctx = trait_ctx
+        self.ranker = ranker
+        self.scheduler = scheduler
+        self.scope = scope
+        self.hybrid = hybrid
+        self.pre_filters = list(pre_filters)
+        self.post_filters = list(post_filters)
+        self.top_k = top_k
+        self.budget_gbhr = budget_gbhr
+        self.weights_fn = weights_fn
+        self.feedback_fn = feedback_fn
+
+    # -- the four phases ------------------------------------------------------
+    def run_cycle(self, catalog: Catalog,
+                  tables: Optional[Sequence] = None) -> CycleReport:
+        t0 = time.perf_counter()
+        rep = CycleReport()
+
+        # candidates + observe
+        cands = generate_candidates(tables if tables is not None
+                                    else catalog.tables(),
+                                    self.scope, hybrid=self.hybrid)
+        rep.n_candidates = len(cands)
+        self.stats.observe_all(cands)
+        cands = filt.apply_filters(cands, self.pre_filters)
+
+        # orient
+        compute_traits(cands, self.traits, self.trait_ctx)
+        cands = filt.apply_filters(cands, self.post_filters)
+        rep.n_after_filters = len(cands)
+
+        # decide (per-candidate quota-adaptive weights if configured)
+        if self.weights_fn is not None:
+            # re-rank with per-candidate weights: score candidates under
+            # their own namespace weights, then order globally
+            from repro.core.decide import minmax_normalize
+            names = list(self.ranker.weights)
+            minmax_normalize(cands, names)
+            for c in cands:
+                w = self.weights_fn(c)
+                c.score = sum(
+                    (-wv if n in self.ranker.costs else wv)
+                    * c.normalized.get(n, 0.0) for n, wv in w.items())
+            ranked = sorted(cands, key=lambda c: (-c.score,) + c.key)
+        else:
+            ranked = self.ranker.rank(cands)
+
+        if self.budget_gbhr is not None:
+            selected = select_budget(ranked, self.budget_gbhr,
+                                     max_k=self.top_k)
+        else:
+            selected = select_topk(ranked, self.top_k or len(ranked))
+        rep.n_selected = len(selected)
+        rep.selected_keys = [c.key for c in selected]
+
+        # act
+        rep.act = self.scheduler.execute(selected)
+
+        # feedback loop -> observe (updated file counts / layout changes)
+        if self.feedback_fn is not None and rep.act is not None:
+            self.feedback_fn(rep)
+        rep.wall_s = time.perf_counter() - t0
+        return rep

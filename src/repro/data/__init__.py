@@ -1,0 +1,5 @@
+from repro.data.shards import (  # noqa
+    decode_shard, encode_shard, TokenShardWriter,
+)
+from repro.data.packing import merge_shards_fn, pack_tokens  # noqa
+from repro.data.pipeline import DataPipeline  # noqa

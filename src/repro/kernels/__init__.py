@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each kernel subpackage ships three modules:
+  <name>.py -- pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    -- jit'd public wrapper (auto interpret-mode on CPU)
+  ref.py    -- pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  compact_pack -- chunk-aligned token-run compaction (the AutoComp rewrite
+                  inner loop adapted to TPU: scalar-prefetched DMA gather)
+  flash_attn   -- causal GQA flash attention (training/prefill)
+  decode_attn  -- flash-decode over a KV cache (single-token serving)
+  rmsnorm      -- fused RMSNorm
+"""

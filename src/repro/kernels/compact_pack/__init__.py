@@ -1,0 +1,1 @@
+from repro.kernels.compact_pack.ops import compact_chunks, plan_compaction  # noqa

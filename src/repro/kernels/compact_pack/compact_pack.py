@@ -1,0 +1,58 @@
+"""Token-run compaction kernel — the AutoComp rewrite inner loop on TPU.
+
+Hardware adaptation (DESIGN.md §2): the Spark executor's file-rewrite loop
+(read many small fragments, emit few target-size files) becomes a
+scalar-prefetched DMA gather. Token shards are written 128x8-aligned
+(CHUNK = 1024 tokens = an (8, 128) int32 VMEM tile), so compacting F
+fragments into dense output blocks is a *permutation of aligned chunks*:
+no compute, pure data movement — exactly what the TPU DMA engine does well.
+
+The chunk index map rides in scalar-prefetch SMEM (PrefetchScalarGridSpec);
+the BlockSpec index_map dereferences it, so the Pallas pipeline issues the
+HBM->VMEM->HBM copies with double buffering. The kernel body is a single
+VMEM tile copy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK_ROWS = 8
+CHUNK_COLS = 128
+CHUNK_TOKENS = CHUNK_ROWS * CHUNK_COLS  # 1024
+
+
+def _copy_kernel(idx_ref, src_ref, out_ref):
+    del idx_ref  # consumed by the BlockSpec index maps
+    out_ref[...] = src_ref[...]
+
+
+def compact_chunks_kernel(src: jnp.ndarray, chunk_map: jnp.ndarray,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Gather chunks of ``src`` according to ``chunk_map``.
+
+    src: (n_src_chunks, CHUNK_ROWS, CHUNK_COLS) any dtype
+    chunk_map: (n_out_chunks,) int32 -- source chunk id per output chunk
+    returns (n_out_chunks, CHUNK_ROWS, CHUNK_COLS)
+    """
+    n_out = chunk_map.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_out,),
+        in_specs=[
+            pl.BlockSpec((1, CHUNK_ROWS, CHUNK_COLS),
+                         lambda i, idx_ref: (idx_ref[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, CHUNK_ROWS, CHUNK_COLS),
+                               lambda i, idx_ref: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_out, CHUNK_ROWS, CHUNK_COLS), src.dtype),
+        interpret=interpret,
+    )(chunk_map, src)

@@ -1,0 +1,66 @@
+"""Public compaction op: plan (host, numpy) + execute (Pallas / oracle).
+
+``plan_compaction`` converts ragged fragment descriptors into the
+chunk-permutation consumed by the kernel; ``compact_chunks`` executes it.
+The data layer (repro.data.packing) feeds real token shards through this.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.compact_pack.compact_pack import (
+    CHUNK_TOKENS, CHUNK_ROWS, CHUNK_COLS, compact_chunks_kernel)
+from repro.kernels.compact_pack.ref import compact_chunks_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def plan_compaction(fragment_chunk_counts: Sequence[int],
+                    fragment_order: Sequence[int] | None = None
+                    ) -> np.ndarray:
+    """Host-side planning: fragments (each a run of chunks laid out
+    back-to-back in the source buffer) -> output chunk map.
+
+    fragment_chunk_counts[i]: chunks in source fragment i.
+    fragment_order: output order of fragments (default: input order).
+    """
+    counts = np.asarray(fragment_chunk_counts, dtype=np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    order = np.arange(len(counts)) if fragment_order is None \
+        else np.asarray(fragment_order)
+    out: List[np.ndarray] = [starts[f] + np.arange(counts[f]) for f in order]
+    if not out:
+        return np.zeros((0,), np.int32)
+    return np.concatenate(out).astype(np.int32)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _run(src3, chunk_map, interpret):
+    return compact_chunks_kernel(src3, chunk_map, interpret=interpret)
+
+
+def compact_chunks(src_tokens: jnp.ndarray, chunk_map: np.ndarray,
+                   use_ref: bool = False) -> jnp.ndarray:
+    """Compact a flat, CHUNK_TOKENS-aligned token buffer.
+
+    src_tokens: (n_chunks * CHUNK_TOKENS,) -- aligned token buffer
+    chunk_map:  (n_out,) int32
+    returns (n_out * CHUNK_TOKENS,)
+    """
+    n = src_tokens.shape[0]
+    assert n % CHUNK_TOKENS == 0, n
+    src3 = src_tokens.reshape(-1, CHUNK_ROWS, CHUNK_COLS)
+    cm = jnp.asarray(chunk_map, jnp.int32)
+    if use_ref:
+        out = compact_chunks_ref(src3, cm)
+    else:
+        out = _run(src3, cm, _use_interpret())
+    return out.reshape(-1)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the compaction gather."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def compact_chunks_ref(src: jnp.ndarray, chunk_map: jnp.ndarray
+                       ) -> jnp.ndarray:
+    return jnp.take(src, chunk_map, axis=0)

@@ -1,0 +1,22 @@
+"""Public flash-decode wrapper (auto interpret on non-TPU backends)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attn.decode_attn import decode_attention_kernel
+from repro.kernels.decode_attn.ref import decode_attention_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_k", "use_ref"))
+def decode_attention(q, k, v, lengths, *, block_k=512, use_ref=False):
+    if use_ref:
+        return decode_attention_ref(q, k, v, lengths)
+    return decode_attention_kernel(q, k, v, lengths, block_k=block_k,
+                                   interpret=_use_interpret())

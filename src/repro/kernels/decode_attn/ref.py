@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash-decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q: (B,H,D); k,v: (B,S,Hkv,D); lengths: (B,)."""
+    b, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    k = jnp.repeat(k, group, axis=2)        # (B,S,H,D)
+    v = jnp.repeat(v, group, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    valid = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Public flash-attention wrapper (auto interpret on non-TPU backends)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attn.flash_attn import flash_attention_kernel
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "use_ref"))
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q=512, block_k=512, use_ref=False):
+    if use_ref:
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_kernel(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_use_interpret())

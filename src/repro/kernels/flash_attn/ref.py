@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: masked softmax attention with GQA."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,H,S,D); k,v: (B,Hkv,S,D)."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= (qp - kp) < window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,26 @@
+"""Public fused-RMSNorm wrapper (auto interpret on non-TPU backends)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_kernel
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "use_ref"))
+def rmsnorm(x, scale, *, eps=1e-6, block_rows=256, use_ref=False):
+    if use_ref:
+        return rmsnorm_ref(x, scale, eps)
+    orig = x.shape
+    x2 = x.reshape(-1, orig[-1])
+    out = rmsnorm_kernel(x2, scale, eps=eps,
+                         block_rows=min(block_rows, x2.shape[0]),
+                         interpret=_use_interpret())
+    return out.reshape(orig)

@@ -1,0 +1,317 @@
+"""Roofline instrumentation.
+
+XLA's ``cost_analysis()`` visits a ``while`` body once, so any program built
+on ``lax.scan`` (our layer stacks, microbatch accumulation, blockwise
+attention) under-reports FLOPs/bytes by the trip count. Two fixes:
+
+1. ``jaxpr_cost(fn, *args)`` — walks the jaxpr, multiplying through ``scan``
+   lengths: exact global dot FLOPs and an HBM-traffic estimate (each
+   dot_general streams operands+outputs through HBM once; elementwise chains
+   are assumed fused and counted at 1 flop / output element, 0 extra bytes).
+
+2. ``hlo_collective_bytes(text)`` — parses the compiled per-device HLO,
+   builds the computation call graph, extracts while-loop trip counts from
+   their condition computations, and multiplies collective bytes through the
+   loop nest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# jaxpr cost
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.dot_flops += o.dot_flops
+        self.hbm_bytes += o.hbm_bytes
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.dot_flops * k, self.hbm_bytes * k)
+
+
+def _aval_bytes(v) -> float:
+    aval = v.aval
+    if not hasattr(aval, "shape"):
+        return 0.0
+    return float(np.prod(aval.shape, dtype=np.float64)) * aval.dtype.itemsize
+
+
+def _aval_size(v) -> float:
+    aval = v.aval
+    if not hasattr(aval, "shape"):
+        return 0.0
+    return float(np.prod(aval.shape, dtype=np.float64))
+
+
+def _dot_cost(eqn) -> Cost:
+    (lhs_c, rhs_c), (lhs_b, rhs_b) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = float(np.prod([lhs.shape[i] for i in lhs_b], dtype=np.float64)) or 1.0
+    k = float(np.prod([lhs.shape[i] for i in lhs_c], dtype=np.float64)) or 1.0
+    m = float(np.prod([s for i, s in enumerate(lhs.shape)
+                       if i not in lhs_c and i not in lhs_b], dtype=np.float64)) or 1.0
+    n = float(np.prod([s for i, s in enumerate(rhs.shape)
+                       if i not in rhs_c and i not in rhs_b], dtype=np.float64)) or 1.0
+    flops = 2.0 * batch * m * n * k
+    byts = _aval_bytes(eqn.invars[0]) + _aval_bytes(eqn.invars[1]) \
+        + sum(_aval_bytes(o) for o in eqn.outvars)
+    return Cost(flops=flops, dot_flops=flops, hbm_bytes=byts)
+
+
+_SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr")
+_ZERO_FLOP_PRIMS = {
+    "reshape", "transpose", "broadcast_in_dim", "convert_element_type",
+    "squeeze", "slice", "dynamic_slice", "dynamic_update_slice",
+    "concatenate", "pad", "rev", "copy", "stop_gradient", "iota",
+    "gather", "scatter", "split", "sharding_constraint",
+}
+
+
+def _jaxpr_cost(jaxpr) -> Cost:
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            total += _dot_cost(eqn)
+        elif prim == "scan":
+            inner = _jaxpr_cost(eqn.params["jaxpr"].jaxpr)
+            total += inner.scaled(float(eqn.params["length"]))
+        elif prim == "while":
+            inner = _jaxpr_cost(eqn.params["body_jaxpr"].jaxpr)
+            total += inner  # unknown trips; we do not emit raw while loops
+        elif prim == "cond":
+            branches = eqn.params["branches"]
+            costs = [_jaxpr_cost(b.jaxpr) for b in branches]
+            worst = max(costs, key=lambda c: c.flops, default=Cost())
+            total += worst
+        else:
+            recursed = False
+            for key in _SUBJAXPR_PARAMS:
+                sub = eqn.params.get(key) if hasattr(eqn, "params") else None
+                if sub is not None:
+                    total += _jaxpr_cost(getattr(sub, "jaxpr", sub))
+                    recursed = True
+                    break
+            if not recursed and prim not in _ZERO_FLOP_PRIMS:
+                total += Cost(flops=sum(_aval_size(o) for o in eqn.outvars))
+    return total
+
+
+def jaxpr_cost(fn, *abstract_args) -> Dict[str, float]:
+    closed = jax.make_jaxpr(fn)(*abstract_args)
+    c = _jaxpr_cost(closed.jaxpr)
+    return {"flops": c.flops, "dot_flops": c.dot_flops,
+            "hbm_bytes": c.hbm_bytes}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D train (N_active for MoE), 2*N*D forward-only."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/seq
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing with loop trip counts
+# ---------------------------------------------------------------------------
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# computation header: "%name (args...) -> type {" — args may contain nested
+# parens (tuple-typed params), so only anchor on the leading name.
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^{]*?condition=%?([\w.\-]+)[^{]*?body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                      r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    depth = 0
+    for line in text.splitlines():
+        s = line.strip()
+        if cur is None:
+            m = _COMP_START_RE.match(s)
+            if m and s.endswith("{") and "->" in s:
+                cur = m.group(1)
+                comps[cur] = []
+                depth = 1
+            continue
+        depth += s.count("{") - s.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(s)
+    return comps
+
+
+def _collective_line_bytes(s: str) -> Optional[Tuple[str, int, int]]:
+    """(op, bytes, bf16-equivalent bytes).
+
+    The CPU backend promotes bf16 dots to f32, so weight/activation
+    collectives appear at 2x their TPU size; the bf16-equivalent number
+    halves f32 collective payloads (TPU keeps them bf16).
+    """
+    for op in COLLECTIVE_OPS:
+        idx = s.find(op + "(")
+        if idx < 0 or op + "-done" in s:
+            continue
+        eq = s.find(" = ")
+        if eq < 0 or eq > idx:
+            continue
+        result = s[eq + 3:idx]
+        byts = 0
+        byts_eq = 0.0
+        for m in _SHAPE_RE.finditer(result):
+            b = _shape_bytes(m.group(1), m.group(2))
+            byts += b
+            byts_eq += b * (0.5 if m.group(1) == "f32" else 1.0)
+        if op == "reduce-scatter":
+            g = _GROUPS_RE.search(s)
+            mul = int(g.group(2)) if g else 1
+            byts *= mul
+            byts_eq *= mul
+        return op, byts, int(byts_eq)
+    return None
+
+
+def _cond_trip_count(lines: List[str]) -> int:
+    consts = [int(m.group(1)) for line in lines for m in _CONST_RE.finditer(line)]
+    return max(consts) if consts else 1
+
+
+def hlo_collective_bytes(text: str) -> Dict[str, Any]:
+    comps = _split_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_START_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+    if entry is None:  # fall back: flat scan, no multipliers
+        entry_lines = [l for ls in comps.values() for l in ls]
+        comps = {"__entry__": entry_lines}
+        entry = "__entry__"
+
+    memo: Dict[str, Dict[str, Any]] = {}
+
+    def zero():
+        return {op: {"count": 0, "bytes": 0, "bytes_bf16eq": 0}
+                for op in COLLECTIVE_OPS}
+
+    def visit(name: str, stack=()) -> Dict[str, Any]:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return zero()
+        agg = zero()
+        for s in comps[name]:
+            hit = _collective_line_bytes(s)
+            if hit:
+                op, byts, byts_eq = hit
+                agg[op]["count"] += 1
+                agg[op]["bytes"] += byts
+                agg[op]["bytes_bf16eq"] += byts_eq
+            wm = _WHILE_RE.search(s)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _cond_trip_count(comps.get(cond, []))
+                sub = visit(body, stack + (name,))
+                for op in COLLECTIVE_OPS:
+                    for k in ("count", "bytes", "bytes_bf16eq"):
+                        agg[op][k] += sub[op][k] * trips
+                continue
+            for cm in _CALL_RE.finditer(s):
+                for callee in re.split(r",\s*%?", cm.group(1)):
+                    if callee in ("", name) or callee in (wm.groups() if wm else ()):
+                        continue
+                    sub = visit(callee, stack + (name,))
+                    for op in COLLECTIVE_OPS:
+                        for k in ("count", "bytes", "bytes_bf16eq"):
+                            agg[op][k] += sub[op][k]
+        memo[name] = agg
+        return agg
+
+    agg = visit(entry)
+    agg["total_bytes"] = sum(v["bytes"] for v in agg.values()
+                             if isinstance(v, dict))
+    agg["total_bytes_bf16eq"] = sum(v["bytes_bf16eq"] for v in agg.values()
+                                    if isinstance(v, dict))
+    return agg
+
+
+def top_collectives(text: str, n: int = 20):
+    """Dynamic (trip-count-multiplied) collective tally grouped by shape —
+    the §Perf profiling view."""
+    comps = _split_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            entry = _COMP_START_RE.match(line.strip()).group(1)
+    tally: Dict[Tuple[str, str], List[float]] = {}
+
+    def visit(name, mult, stack=()):
+        if name in stack or name not in comps:
+            return
+        for s in comps[name]:
+            hit = _collective_line_bytes(s)
+            if hit:
+                op, byts, _ = hit
+                shape = s.split(" = ")[1].split(" ")[0][:70]
+                c, b = tally.get((op, shape), (0, 0))
+                tally[(op, shape)] = (c + mult, b + byts * mult)
+            wm = _WHILE_RE.search(s)
+            if wm:
+                trips = _cond_trip_count(comps.get(wm.group(1), []))
+                visit(wm.group(2), mult * trips, stack + (name,))
+                continue
+            for cm in _CALL_RE.finditer(s):
+                for callee in re.split(r",\s*%?", cm.group(1)):
+                    if callee and callee != name:
+                        visit(callee, mult, stack + (name,))
+
+    visit(entry, 1)
+    rows = sorted(tally.items(), key=lambda kv: -kv[1][1])[:n]
+    return [{"op": op, "shape": shape, "count": c, "bytes": b}
+            for (op, shape), (c, b) in rows]

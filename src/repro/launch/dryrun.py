@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any jax import (jax locks the device
+# count on first init). Do not move them.
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs import shapes as shapes_lib
+from repro.dist import sharding as shd
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+
+# --- TPU v5e-class hardware constants (per chip) ---------------------------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link (1 link assumed: conservative)
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+# collective parsing (loop-trip-count aware) lives in repro.launch.analysis
+parse_collectives = analysis.hlo_collective_bytes
+
+
+def _mem_analysis(compiled) -> Dict[str, Optional[int]]:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        m = None
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    if m is None:
+        return {k: None for k in keys}
+    return {k: int(getattr(m, k, 0) or 0) for k in keys}
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    try:
+        c = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return {k: float(v) for k, v in c.items()
+            if isinstance(v, (int, float)) and not k.startswith("bytes accessed{")}
+
+
+model_flops = analysis.model_flops
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               skip_compile: bool = False, preset: str = "baseline",
+               microbatches: Optional[int] = None,
+               remat_block: Optional[int] = None,
+               capacity_factor: Optional[float] = None) -> Dict[str, Any]:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if remat_block is not None:
+        cfg = _dc.replace(cfg, remat_block=remat_block)
+    if capacity_factor is not None:
+        cfg = _dc.replace(cfg, capacity_factor=capacity_factor)
+    shape = shapes_lib.SHAPES[shape_name]
+    if microbatches is not None and shape.kind == "train":
+        shape = _dc.replace(shape, microbatches=microbatches)
+    rules = shd.PRESETS[preset]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "preset": preset,
+        "microbatches": shape.microbatches,
+        "remat_block": cfg.remat_block,
+        "capacity_factor": cfg.capacity_factor,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    ok, why = shapes_lib.applicable(cfg, shape)
+    if not ok:
+        rec["status"] = "skip"
+        rec["skip_reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    rec["chips"] = n_chips
+
+    p_axes = transformer.param_axes(cfg)
+    p_abs = transformer.abstract_params(cfg)
+    p_shard = shd.tree_shardings(p_abs, p_axes, mesh, rules)
+    batch_sds, cache_sds = shapes_lib.input_specs(cfg, shape)
+    b_axes = shapes_lib.batch_axes(cfg, shape)
+    b_shard = {k: NamedSharding(mesh, shd.resolve_spec(
+        batch_sds[k].shape, b_axes[k], mesh, rules)) for k in batch_sds}
+
+    fn, kind = step_lib.step_for_shape(cfg, shape)
+    ctx = shd.axis_rules(mesh, rules)
+    t0 = time.time()
+    if kind == "train":
+        o_abs = opt_lib.abstract_state(p_abs)
+        o_axes = opt_lib.state_axes(p_axes)
+        o_shard = shd.tree_shardings(o_abs, o_axes, mesh, rules)
+        jfn = jax.jit(fn, in_shardings=(p_shard, o_shard, b_shard),
+                      out_shardings=(p_shard, o_shard, None))
+        lower_args = (p_abs, o_abs, batch_sds)
+    elif kind in ("prefill", "encode"):
+        jfn = jax.jit(fn, in_shardings=(p_shard, b_shard))
+        lower_args = (p_abs, batch_sds)
+    else:  # decode
+        c_axes = transformer.cache_axes(cfg, shape.global_batch, shape.seq_len)
+        c_shard = shd.tree_shardings(cache_sds, c_axes, mesh, rules)
+        jfn = jax.jit(fn, in_shardings=(p_shard, c_shard, b_shard),
+                      out_shardings=(None, c_shard))
+        lower_args = (p_abs, cache_sds, batch_sds)
+    with ctx:
+        lowered = jfn.lower(*lower_args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    # exact analytic cost (scan-trip-count aware), global -> per device
+    t0 = time.time()
+    with shd.axis_rules(mesh, rules):
+        jc = analysis.jaxpr_cost(fn, *lower_args)
+    rec["jaxpr_cost"] = jc
+    rec["jaxpr_cost_s"] = round(time.time() - t0, 2)
+
+    if skip_compile:
+        rec["status"] = "lowered"
+        return rec
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    mem = _mem_analysis(compiled)
+    cost = _cost_analysis(compiled)
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    rec["memory_analysis"] = mem
+    rec["cost_analysis"] = {k: cost[k] for k in ("flops", "bytes accessed")
+                            if k in cost}
+    rec["collectives"] = coll
+
+    flops_dev = jc["flops"] / n_chips          # analytic, trip-count exact
+    bytes_dev = jc["hbm_bytes"] / n_chips      # dot-operand HBM traffic model
+    # per-device, loop-aware, adjusted for the CPU backend's bf16->f32 dot
+    # promotion (TPU keeps these payloads bf16); raw bytes kept in the record
+    coll_dev = float(coll["total_bytes_bf16eq"])
+    mf = model_flops(cfg, shape)
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_dev / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    bound_s = terms[dom]
+    rec["roofline"] = {
+        **terms,
+        "dominant": dom,
+        "model_flops": mf,
+        "model_flops_per_device": mf / n_chips,
+        "hlo_flops_per_device": flops_dev,
+        "useful_flops_ratio": (mf / n_chips) / flops_dev if flops_dev else None,
+        "roofline_fraction": ((mf / n_chips) / PEAK_FLOPS) / bound_s
+        if bound_s else None,
+    }
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--preset", default="baseline",
+                    choices=sorted(shd.PRESETS))
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat-block", type=int, default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(shapes_lib.SHAPE_IDS) if args.shape == "all" \
+        else args.shape.split(",")
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    parts = []
+    if args.preset != "baseline":
+        parts.append(args.preset)
+    if args.microbatches:
+        parts.append(f"mb{args.microbatches}")
+    if args.remat_block:
+        parts.append(f"rb{args.remat_block}")
+    if args.capacity_factor:
+        parts.append(f"cf{args.capacity_factor}")
+    variant = ("__" + "-".join(parts)) if parts else ""
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}" \
+                    + variant
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, mp,
+                                     skip_compile=args.lower_only,
+                                     preset=args.preset,
+                                     microbatches=args.microbatches,
+                                     remat_block=args.remat_block,
+                                     capacity_factor=args.capacity_factor)
+                except Exception as e:  # a failure here is a bug in the system
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec.get("status")
+                if status == "ok":
+                    r = rec["roofline"]
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"dom={r['dominant']} "
+                          f"compute={r['compute_s']:.4f}s "
+                          f"mem={r['memory_s']:.4f}s "
+                          f"coll={r['collective_s']:.4f}s "
+                          f"frac={r['roofline_fraction'] and round(r['roofline_fraction'], 3)}",
+                          flush=True)
+                else:
+                    print(f"  {status}: {rec.get('skip_reason') or rec.get('error', '')[:200]}",
+                          flush=True)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Serving launcher: batched prefill + decode with a KV cache.
+
+``python -m repro.launch.serve --arch granite-3-8b --smoke`` runs a batched
+generation loop on CPU with the reduced config; the full configs lower on
+the production mesh via the dry-run. Continuous batching: requests at
+different positions share one decode step (ragged lengths are masked —
+same semantics the decode_attn Pallas kernel implements on TPU).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.configs.shapes import ShapeSpec
+from repro.models import transformer
+from repro.train import step as step_lib
+
+
+def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
+             temperature: float = 0.0, seed: int = 0):
+    """prompts: (B, S0) int32. Greedy (or sampled) decode of max_new tokens."""
+    b, s0 = prompts.shape
+    total = s0 + max_new
+    prefill = jax.jit(step_lib.make_prefill_step(cfg))
+    decode = jax.jit(step_lib.make_decode_step(cfg, total))
+
+    logits, cache = prefill(params, {"tokens": jnp.asarray(prompts)})
+    # grow every cache leaf to the decode-horizon shape (end-padding); the
+    # target comes from the abstract decode cache, so windowed/SSM/xLSTM
+    # states are handled uniformly
+    target = transformer.abstract_cache(cfg, b, total)
+
+    def grow(c, tgt):
+        if c.shape == tgt.shape:
+            return c.astype(tgt.dtype)
+        pad = [(0, t - s) for s, t in zip(c.shape, tgt.shape)]
+        return jnp.pad(c, pad).astype(tgt.dtype)
+
+    cache = jax.tree.map(grow, cache, target)
+
+    key = jax.random.PRNGKey(seed)
+    out_tokens = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    for i in range(max_new):
+        out_tokens.append(np.asarray(tok))
+        logits, cache = decode(params, cache,
+                               {"tokens": tok,
+                                "pos": jnp.asarray(s0 + i, jnp.int32)})
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / temperature
+                                         ).astype(jnp.int32)[:, None]
+        else:
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    return np.concatenate(out_tokens, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only; no decode serving")
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key)
+    prompts = np.random.RandomState(0).randint(
+        0, cfg.vocab, size=(args.batch, args.prompt_len)).astype(np.int32)
+
+    t0 = time.time()
+    out = generate(cfg, params, prompts, max_new=args.max_new)
+    dt = time.time() - t0
+    n_tok = out.size
+    print(f"[serve] arch={cfg.name} batch={args.batch} "
+          f"prompt={args.prompt_len} new={args.max_new}")
+    print(f"[serve] generated {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s incl. compile)")
+    print("[serve] sample:", out[0][:10])
+
+
+if __name__ == "__main__":
+    main()

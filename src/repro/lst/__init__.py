@@ -1,0 +1,4 @@
+from repro.lst.files import DataFile, ManifestFile, Snapshot, TableMetadata  # noqa
+from repro.lst.storage import InMemoryStore, LocalFSStore, ObjectStore  # noqa
+from repro.lst.table import CommitConflict, LogStructuredTable, Transaction  # noqa
+from repro.lst.catalog import Catalog, Namespace  # noqa

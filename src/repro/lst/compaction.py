@@ -1,0 +1,225 @@
+"""Bin-pack compaction execution (Iceberg's rewriteDataFiles analogue).
+
+``plan_binpack`` groups undersized files into bins of ~target size;
+``execute_task`` rewrites one bin: read inputs (metered), merge content
+through a pluggable ``merge_fn`` (token shards use the Pallas-backed packer
+in repro.data), write output(s), and commit a ``replace`` snapshot with
+retry-on-conflict. Supports partial progress (per-bin commits) — FR1's
+fine-grained work units — and failure injection for fault-tolerance tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.lst.files import DataFile
+from repro.lst.table import CommitConflict, LogStructuredTable
+
+_task_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class CompactionTask:
+    task_id: int
+    table_id: str
+    scope: Optional[str]                 # partition value or None (table scope)
+    inputs: Tuple[DataFile, ...]
+    est_output_bytes: int
+
+    @property
+    def input_bytes(self) -> int:
+        return sum(f.size_bytes for f in self.inputs)
+
+
+@dataclasses.dataclass
+class CompactionResult:
+    task: CompactionTask
+    success: bool
+    conflict: bool = False
+    retries: int = 0
+    files_removed: int = 0
+    files_added: int = 0
+    bytes_rewritten: int = 0
+    gbhr: float = 0.0
+    error: Optional[str] = None
+
+
+def plan_binpack(files: Sequence[DataFile], target_bytes: int,
+                 min_input_files: int = 2,
+                 scope: Optional[str] = None) -> List[CompactionTask]:
+    """First-fit-decreasing bin packing of small files into ~target bins."""
+    small = sorted((f for f in files if f.size_bytes < target_bytes),
+                   key=lambda f: -f.size_bytes)
+    bins: List[List[DataFile]] = []
+    sizes: List[int] = []
+    for f in small:
+        for i, s in enumerate(sizes):
+            if s + f.size_bytes <= target_bytes:
+                bins[i].append(f)
+                sizes[i] += f.size_bytes
+                break
+        else:
+            bins.append([f])
+            sizes.append(f.size_bytes)
+    tasks = []
+    for b, s in zip(bins, sizes):
+        if len(b) >= min_input_files:
+            tasks.append(CompactionTask(next(_task_ids), "", scope,
+                                        tuple(b), s))
+    return tasks
+
+
+def plan_table(table: LogStructuredTable, target_bytes: int,
+               scope: str = "table", min_input_files: int = 2
+               ) -> List[CompactionTask]:
+    """Plan tasks for a table at the given candidate scope.
+
+    Execution ALWAYS respects partition boundaries (compaction never merges
+    across partitions — §7); the scope only controls candidate granularity
+    upstream. This is exactly why the paper's table-level ΔF_c estimator
+    overestimates on partitioned tables: it counts small files across the
+    whole table, while execution can only merge within each partition.
+    """
+    tasks: List[CompactionTask] = []
+    for part in table.partitions() or [""]:
+        files = [f for f in table.current_files()
+                 if (f.partition or "") == part]
+        for t in plan_binpack(files, target_bytes, min_input_files,
+                              part or None):
+            t.table_id = table.table_id
+            tasks.append(t)
+    return tasks
+
+
+def default_merge_fn(table: LogStructuredTable, task: CompactionTask,
+                     out_path: str) -> DataFile:
+    """Synthetic merge: concatenates the raw payloads of the inputs."""
+    blobs = [table.store.get(f.path) for f in task.inputs]
+    data = b"".join(blobs)
+    table.store.put(out_path, data)
+    return DataFile(
+        path=out_path, size_bytes=sum(f.size_bytes for f in task.inputs),
+        num_rows=sum(f.num_rows for f in task.inputs),
+        partition=task.scope, created_at=table.now_fn())
+
+
+def execute_tasks_atomic(table: LogStructuredTable,
+                         tasks: Sequence[CompactionTask],
+                         merge_fn: Callable = default_merge_fn,
+                         max_retries: int = 2,
+                         executor_memory_gb: float = 8.0,
+                         rewrite_bytes_per_hour: float = 256e9,
+                         interleave_fn: Optional[Callable] = None
+                         ) -> CompactionResult:
+    """Table-scope execution: ALL bins of a candidate rewritten in ONE
+    commit (Iceberg's default rewriteDataFiles). The conflict window spans
+    the whole rewrite — this is why the paper's table-scope runs hit
+    cluster-side conflicts that partition-scope (per-partition commits)
+    avoids."""
+    agg = CompactionTask(next(_task_ids), table.table_id, None,
+                         tuple(f for t in tasks for f in t.inputs),
+                         sum(t.est_output_bytes for t in tasks))
+    res = CompactionResult(task=agg, success=False)
+    if not tasks:
+        res.success = True
+        return res
+    txn = table.new_transaction()       # plan-time basis for the whole job
+    new_files = []
+    for t in tasks:
+        ext = t.inputs[0].path.rsplit(".", 1)[-1] if t.inputs else "bin"
+        out_path = f"{table.table_id}/data/compacted-{t.task_id}.{ext}"
+        try:
+            new_files.append(merge_fn(table, t, out_path))
+        except FileNotFoundError as e:
+            res.error = f"missing input: {e}"
+            return res
+        if interleave_fn is not None:
+            interleave_fn(table, t)
+    for attempt in range(max_retries + 1):
+        inputs_alive = {f.path for f in table.current_files()}
+        live_inputs = [f for f in agg.inputs if f.path in inputs_alive]
+        try:
+            txn.rewrite_files(live_inputs, new_files, scope=None)
+            txn.commit()
+            res.success = True
+            break
+        except CommitConflict:
+            res.conflict = True
+            res.retries = attempt + 1
+            txn = table.new_transaction()
+    if res.success:
+        live = {f.path for f in agg.inputs}
+        for f in agg.inputs:
+            if table.store.exists(f.path):
+                table.store.delete(f.path)
+        inputs_alive = {f.path for f in table.current_files()}
+        res.files_removed = len([f for f in agg.inputs
+                                 if f.path not in inputs_alive])
+        res.files_added = len(new_files)
+        res.bytes_rewritten = sum(f.size_bytes for f in agg.inputs)
+        res.gbhr = executor_memory_gb * (res.bytes_rewritten
+                                         / rewrite_bytes_per_hour)
+    return res
+
+
+def execute_task(table: LogStructuredTable, task: CompactionTask,
+                 merge_fn: Callable = default_merge_fn,
+                 max_retries: int = 2,
+                 executor_memory_gb: float = 8.0,
+                 rewrite_bytes_per_hour: float = 256e9,
+                 fail_fn: Optional[Callable[[CompactionTask], bool]] = None,
+                 interleave_fn: Optional[Callable] = None
+                 ) -> CompactionResult:
+    """Rewrite one bin and commit.
+
+    Faithful long-running-job semantics: the rewrite TRANSACTION is opened at
+    plan time (before the merge work), so concurrent commits that land while
+    the rewrite runs trigger conflict validation at commit — the §4.4/§6.2
+    behavior. ``interleave_fn(table)`` (tests/benchmarks) injects concurrent
+    work into that window. Retries re-open a fresh-basis transaction.
+    """
+    res = CompactionResult(task=task, success=False)
+    if fail_fn is not None and fail_fn(task):
+        res.error = "injected_failure"
+        return res
+    sid = f"{task.task_id}"
+    ext = task.inputs[0].path.rsplit(".", 1)[-1] if task.inputs else "bin"
+    out_path = f"{table.table_id}/data/compacted-{sid}.{ext}"
+    txn = table.new_transaction()       # plan-time snapshot basis
+    try:
+        new_file = merge_fn(table, task, out_path)
+    except FileNotFoundError as e:
+        res.error = f"missing input: {e}"
+        return res
+    if interleave_fn is not None:
+        interleave_fn(table, task)      # concurrent user work mid-rewrite
+    inputs_alive = {f.path for f in table.current_files()}
+    live_inputs = [f for f in task.inputs if f.path in inputs_alive]
+    for attempt in range(max_retries + 1):
+        try:
+            txn.rewrite_files(live_inputs, [new_file], scope=task.scope)
+            txn.commit()
+            res.success = True
+            break
+        except CommitConflict:
+            res.conflict = True
+            res.retries = attempt + 1
+            inputs_alive = {f.path for f in table.current_files()}
+            live_inputs = [f for f in task.inputs if f.path in inputs_alive]
+            txn = table.new_transaction()   # fresh basis for the retry
+            if len(live_inputs) < 2:
+                res.error = "inputs no longer live after conflict"
+                break
+    if res.success:
+        for f in task.inputs:           # physical cleanup of replaced files
+            if table.store.exists(f.path):
+                table.store.delete(f.path)
+        res.files_removed = len(live_inputs)
+        res.files_added = 1
+        res.bytes_rewritten = sum(f.size_bytes for f in live_inputs)
+        # paper §4.2: GBHr_c = ExecutorMemoryGB * DataSize_c / RewriteBytesPerHour
+        res.gbhr = executor_memory_gb * (res.bytes_rewritten
+                                         / rewrite_bytes_per_hour)
+    return res

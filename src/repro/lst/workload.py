@@ -1,0 +1,214 @@
+"""CAB-like synthetic workload generator (§6 "Design of Experimental
+Workloads"): query streams modeled after cloud warehouse usage — constant
+demand with sinusoidal variation (dashboards), short bursts (interactive),
+large bursts (daily maintenance), and predictable hourly jobs — driving
+writes into partitioned (LINEITEM-like) and unpartitioned (ORDERS-like)
+tables. Deterministic under a seed (NFR2 makes the whole pipeline
+reproducible end-to-end).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.lst.catalog import Catalog
+from repro.lst.files import DataFile
+from repro.lst.table import CommitConflict, LogStructuredTable
+
+MB = 1 << 20
+
+
+class SimClock:
+    """Logical time in hours (float)."""
+
+    def __init__(self, start: float = 0.0) -> None:
+        self.t = start
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, hours: float) -> None:
+        self.t += hours
+
+
+@dataclasses.dataclass
+class StreamSpec:
+    kind: str          # "dashboard" | "interactive" | "maintenance" | "hourly"
+    table: str
+    namespace: str
+    reads_per_hour: float = 4.0
+    writes_per_hour: float = 1.0
+    files_per_write: Tuple[int, int] = (4, 40)       # min,max small files
+    file_size_mb: Tuple[float, float] = (0.5, 32.0)  # lognormal-ish range
+
+
+@dataclasses.dataclass
+class WorkloadSpec:
+    n_databases: int = 4
+    tables_per_db: int = 4
+    partitions_per_table: int = 12        # monthly SHIPDATE granularity
+    partitioned_fraction: float = 0.5
+    target_file_mb: int = 512
+    initial_files_per_table: Tuple[int, int] = (50, 400)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class QueryEvent:
+    t: float
+    kind: str            # "read" | "write"
+    table_id: str
+    latency: float = 0.0
+    files_scanned: int = 0
+    conflict: bool = False
+    retries: int = 0
+
+
+class CostModel:
+    """Client-visible latency model: planning scales with file count (RPC
+    pressure), execution with bytes and per-file open overhead — the
+    mechanism behind Fig. 3/Fig. 8."""
+
+    def __init__(self, open_ms: float = 4.0, plan_ms_per_file: float = 0.8,
+                 read_gb_per_s: float = 1.0, base_ms: float = 50.0):
+        self.open_ms = open_ms
+        self.plan_ms_per_file = plan_ms_per_file
+        self.read_gb_per_s = read_gb_per_s
+        self.base_ms = base_ms
+
+    def read_latency_s(self, files: Sequence[DataFile]) -> float:
+        n = len(files)
+        byts = sum(f.size_bytes for f in files)
+        return (self.base_ms + n * (self.open_ms + self.plan_ms_per_file)
+                ) / 1e3 + byts / (self.read_gb_per_s * 1e9)
+
+
+class WorkloadGenerator:
+    def __init__(self, catalog: Catalog, spec: WorkloadSpec,
+                 clock: Optional[SimClock] = None,
+                 cost: Optional[CostModel] = None) -> None:
+        self.catalog = catalog
+        self.spec = spec
+        self.clock = clock or SimClock()
+        self.cost = cost or CostModel()
+        self.rng = np.random.RandomState(spec.seed)
+        self.streams: List[StreamSpec] = []
+        self.events: List[QueryEvent] = []
+        self._file_ids = itertools.count(1)
+
+    # -------------------------------------------------------------- setup
+    def setup(self) -> None:
+        kinds = ["dashboard", "interactive", "maintenance", "hourly"]
+        for d in range(self.spec.n_databases):
+            ns = f"db{d:02d}"
+            self.catalog.create_namespace(ns, total_quota=200_000)
+            for t in range(self.spec.tables_per_db):
+                partitioned = self.rng.rand() < self.spec.partitioned_fraction
+                name = f"table{t:02d}"
+                table = self.catalog.create_table(
+                    ns, name, "ship_month" if partitioned else None,
+                    properties={"conflict_granularity": "table"})
+                table.now_fn = self.clock.now
+                n0 = self.rng.randint(*self.spec.initial_files_per_table)
+                self._append_small_files(table, n0)
+                self.streams.append(StreamSpec(
+                    kind=kinds[t % len(kinds)], table=name, namespace=ns,
+                    reads_per_hour=float(self.rng.randint(2, 12)),
+                    writes_per_hour=float(self.rng.randint(1, 6))))
+
+    def _rand_partition(self, table: LogStructuredTable) -> Optional[str]:
+        if not table.meta.partition_spec:
+            return None
+        return f"m{self.rng.randint(self.spec.partitions_per_table):02d}"
+
+    def _small_file(self, table: LogStructuredTable,
+                    partition: Optional[str]) -> DataFile:
+        lo, hi = 0.5, 32.0
+        size = float(np.exp(self.rng.uniform(np.log(lo), np.log(hi)))) * MB
+        fid = next(self._file_ids)
+        path = f"{table.table_id}/data/part-{fid:08d}.parquet"
+        table.store.put(path, b"x" * min(int(size) // (1 << 14) + 1, 4096))
+        return DataFile(path=path, size_bytes=int(size),
+                        num_rows=int(size // 200), partition=partition,
+                        created_at=self.clock.now())
+
+    def _append_small_files(self, table: LogStructuredTable, n: int) -> int:
+        files = [self._small_file(table, self._rand_partition(table))
+                 for _ in range(n)]
+        before = table.cas_retries
+        table.append(files)
+        self.catalog.notify_write(table)
+        return table.cas_retries - before
+
+    def _prepare_append(self, table: LogStructuredTable, n: int):
+        """Open an append transaction (committed later — concurrent writers
+        on the same table then collide on the version CAS, the paper's
+        client-side conflicts)."""
+        files = [self._small_file(table, self._rand_partition(table))
+                 for _ in range(n)]
+        return table.new_transaction().append_files(files)
+
+    # -------------------------------------------------------------- phases
+    def _intensity(self, stream: StreamSpec, hour: float) -> float:
+        if stream.kind == "dashboard":     # sinusoidal constant demand
+            return 1.0 + 0.5 * math.sin(2 * math.pi * hour / 24.0)
+        if stream.kind == "interactive":   # short random bursts
+            return 3.0 if self.rng.rand() < 0.2 else 0.3
+        if stream.kind == "maintenance":   # large daily burst around hour 4
+            return 6.0 if int(hour) % 24 == 4 else 0.1
+        return 1.0 if abs(hour - round(hour)) < 0.26 else 0.0   # hourly job
+
+    def run_hour(self, substeps: int = 4) -> List[QueryEvent]:
+        """Advance one logical hour of mixed reads/writes. Writes within a
+        substep run as CONCURRENT transactions (opened first, committed
+        together), so same-table writers collide on the version CAS."""
+        out: List[QueryEvent] = []
+        for _ in range(substeps):
+            self.clock.advance(1.0 / substeps)
+            pending = []                      # (table, txn, event)
+            for st in self.streams:
+                table = self.catalog.get_table(st.namespace, st.table)
+                inten = self._intensity(st, self.clock.now())
+                n_reads = self.rng.poisson(st.reads_per_hour * inten / substeps)
+                n_writes = self.rng.poisson(st.writes_per_hour * inten / substeps)
+                for _ in range(n_reads):
+                    part = self._rand_partition(table)
+                    files = table.scan(partition=part)
+                    # execute the read: one open() RPC per data file (the
+                    # HDFS pressure that Fig. 11b measures)
+                    for f in files:
+                        if table.store.exists(f.path):
+                            table.store.metrics.open_calls += 1
+                    ev = QueryEvent(self.clock.now(), "read", table.table_id,
+                                    latency=self.cost.read_latency_s(files),
+                                    files_scanned=len(files))
+                    out.append(ev)
+                for _ in range(n_writes):
+                    n_files = self.rng.randint(*st.files_per_write)
+                    txn = self._prepare_append(table, n_files)
+                    ev = QueryEvent(self.clock.now(), "write", table.table_id)
+                    pending.append((table, txn, ev))
+                    out.append(ev)
+            for table, txn, ev in pending:    # concurrent commit wave
+                before = table.cas_retries
+                txn.commit()
+                self.catalog.notify_write(table)
+                ev.retries = table.cas_retries - before
+                ev.conflict = ev.retries > 0
+        self.events.extend(out)
+        return out
+
+    # -------------------------------------------------------------- metrics
+    def total_file_count(self) -> int:
+        return sum(t.file_count() for t in self.catalog.tables())
+
+    def small_file_fraction(self, target_bytes: int) -> float:
+        files = [f for t in self.catalog.tables() for f in t.current_files()]
+        if not files:
+            return 0.0
+        return sum(1 for f in files if f.size_bytes < target_bytes) / len(files)

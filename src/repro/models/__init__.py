@@ -1,0 +1,6 @@
+from repro.models.registry import (  # noqa: F401
+    abstract_params,
+    init_params,
+    param_axes,
+    forward,
+)

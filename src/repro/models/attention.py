@@ -1,0 +1,203 @@
+"""Attention layers: GQA (optional QKV bias, optional sliding window) and
+MLA (Multi-head Latent Attention, MiniCPM3/DeepSeek-style).
+
+Each layer exposes ``specs(cfg)`` (parameter declarations) and
+``apply(cfg, p, x, mode, cache, pos)`` -> (out, new_cache).
+
+Cache layouts (per layer, no leading layers axis here):
+  GQA : {"k": (B, S_c, Hkv, D), "v": (B, S_c, Hkv, D)}   S_c = window or seq
+  MLA : {"latent": (B, S_c, kv_lora), "k_rope": (B, S_c, rope_dim)}
+Cached K is stored *post-RoPE* (standard for ring buffers: relative property
+is preserved because Q is rotated at query position).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.dist.sharding import constrain, mesh_axis_size
+from repro.models import common
+from repro.models.common import Spec, blockwise_attention, decode_attention, apply_rope
+
+
+# ---------------------------------------------------------------------------
+# slot bookkeeping for (ring) caches
+# ---------------------------------------------------------------------------
+
+def cache_slot_positions(cache_len_total: int, size: int, pos) -> jnp.ndarray:
+    """Absolute position held by each cache slot, -1 if empty.
+
+    For a full cache (size >= max seq) slot i holds position i (valid iff
+    i <= pos). For a ring buffer of ``size`` slots, slot i holds the largest
+    p <= pos with p % size == i (valid iff p >= 0); assumes contiguous fill.
+    """
+    idx = jnp.arange(size, dtype=jnp.int32)
+    if cache_len_total <= size:  # full cache
+        return jnp.where(idx <= pos, idx, -1)
+    p = pos - ((pos - idx) % size)
+    return jnp.where(p >= 0, p, -1)
+
+
+def ring_update(buf: jnp.ndarray, new: jnp.ndarray, pos) -> jnp.ndarray:
+    """Write ``new`` (B, 1, ...) at slot pos % size of ``buf`` (B, size, ...)."""
+    size = buf.shape[1]
+    slot = jax.lax.rem(jnp.asarray(pos, jnp.int32), size)
+    start = (jnp.zeros((), jnp.int32), slot) + (jnp.zeros((), jnp.int32),) * (buf.ndim - 2)
+    return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), start)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": Spec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": Spec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Spec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Spec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = Spec((h, hd), ("heads", "head_dim"), init="zeros")
+        s["bk"] = Spec((hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = Spec((hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def gqa_apply(cfg: ModelConfig, p, x: jnp.ndarray, mode: str,
+              cache: Optional[dict], pos, cache_len_total: int,
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+
+    if mode == "decode":
+        q = apply_rope(q, jnp.full((b, 1), pos, jnp.int32), cfg.rope_theta)
+        k = apply_rope(k, jnp.full((b, 1), pos, jnp.int32), cfg.rope_theta)
+        size = cache["k"].shape[1]
+        cache_sp = ("batch", "kv_seq", "kv_heads", None)
+        k_cache = constrain(ring_update(cache["k"], k, pos), *cache_sp)
+        v_cache = constrain(ring_update(cache["v"], v, pos), *cache_sp)
+        kpos = cache_slot_positions(cache_len_total + 1, size, pos)
+        if cfg.attn_window:
+            kpos = jnp.where(kpos > pos - cfg.attn_window, kpos, -1)
+        out = decode_attention(q, k_cache, v_cache, kpos, pos)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        new_cache = None
+        if mode == "prefill":
+            size = cfg.attn_window or s
+            new_cache = {"k": k[:, -size:].astype(common.COMPUTE_DTYPE),
+                         "v": v[:, -size:].astype(common.COMPUTE_DTYPE)}
+        # TP > kv_heads: replicate KV across query-head groups so attention
+        # activations stay head-sharded (MaxText-style KV replication).
+        tp = mesh_axis_size("model")
+        h, hkv = cfg.n_heads, cfg.n_kv_heads
+        if tp > 1 and h % tp == 0 and hkv % tp != 0:
+            rep = h // hkv
+            k = constrain(jnp.repeat(k, rep, axis=2), "batch", None, "heads", None)
+            v = constrain(jnp.repeat(v, rep, axis=2), "batch", None, "heads", None)
+        out = blockwise_attention(q, k, v, causal=cfg.causal,
+                                  window=cfg.attn_window)
+    y = constrain(jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
+                  "batch", None, "act_embed")
+    return y, new_cache
+
+
+def gqa_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    size = min(cfg.attn_window, seq) if cfg.attn_window else seq
+    kv = (batch, size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": kv, "v": kv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (latent KV cache)
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    d, h = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": Spec((d, rq), ("embed", "q_lora")),
+        "wq_b": Spec((rq, h, dn + dr), ("q_lora", "heads", "head_dim")),
+        "wkv_a": Spec((d, rkv + dr), ("embed", "kv_lora")),
+        "wk_b": Spec((rkv, h, dn), ("kv_lora", "heads", "head_dim")),
+        "wv_b": Spec((rkv, h, dv), ("kv_lora", "heads", "head_dim")),
+        "wo": Spec((h, dv, d), ("heads", "head_dim", "embed")),
+        "q_norm": Spec((rq,), ("q_lora",), init="ones"),
+        "kv_norm": Spec((rkv,), ("kv_lora",), init="ones"),
+    }
+
+
+def _mla_qk(cfg, p, x, positions):
+    """Project to per-head q (nope|rope) and latent kv. x:(B,S,d)."""
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+    cq = common.rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"],
+                         cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])          # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])           # (B,S,rkv+dr)
+    latent = common.rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_norm"],
+                             cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, cfg.kv_lora_rank:], positions,
+                        cfg.rope_theta)[..., 0, :]          # (B,S,dr) shared
+    return jnp.concatenate([q_nope, q_rope], -1), latent, k_rope
+
+
+def _mla_expand(cfg, p, latent, k_rope):
+    """Expand latent into per-head K (nope|rope-shared) and V."""
+    k_nope = jnp.einsum("bsr,rhk->bshk", latent, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", latent, p["wv_b"])
+    kr = jnp.broadcast_to(k_rope[:, :, None, :],
+                          k_nope.shape[:3] + (cfg.rope_head_dim,))
+    return jnp.concatenate([k_nope, kr], -1), v
+
+
+def mla_apply(cfg: ModelConfig, p, x, mode, cache, pos, cache_len_total):
+    b, s, _ = x.shape
+    if mode == "decode":
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        q, latent, k_rope = _mla_qk(cfg, p, x, positions)
+        lat_cache = constrain(ring_update(cache["latent"], latent, pos),
+                              "batch", "kv_seq", None)
+        kr_cache = constrain(ring_update(cache["k_rope"],
+                                         k_rope[:, :, None, :], pos),
+                             "batch", "kv_seq", None, None)
+        k, v = _mla_expand(cfg, p, lat_cache, kr_cache[..., 0, :])
+        kpos = cache_slot_positions(cache_len_total + 1, lat_cache.shape[1], pos)
+        out = decode_attention(q, k, v, kpos, pos)
+        new_cache = {"latent": lat_cache, "k_rope": kr_cache}
+    else:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+        q, latent, k_rope = _mla_qk(cfg, p, x, positions)
+        k, v = _mla_expand(cfg, p, latent, k_rope)
+        out = blockwise_attention(q, k, v, causal=cfg.causal)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"latent": latent.astype(common.COMPUTE_DTYPE),
+                         "k_rope": k_rope[:, :, None, :].astype(common.COMPUTE_DTYPE)}
+    y = constrain(jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
+                  "batch", None, "act_embed")
+    return y, new_cache
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    return {"latent": (batch, seq, cfg.kv_lora_rank),
+            "k_rope": (batch, seq, 1, cfg.rope_head_dim)}

@@ -1,0 +1,16 @@
+"""Thin public facade over the model zoo."""
+
+from __future__ import annotations
+
+from repro.configs import ModelConfig, get_config, smoke_config  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    abstract_cache,
+    abstract_params,
+    cache_axes,
+    cache_struct,
+    forward,
+    init_cache,
+    init_params,
+    param_axes,
+    param_specs,
+)

@@ -1,0 +1,132 @@
+"""Selective SSM (Mamba-style) head used by the Hymba hybrid layer.
+
+Training/prefill uses a chunked associative scan — projections AND the
+(B, c, di, N) state tensors are materialized one chunk at a time inside a
+``lax.scan``, so peak memory is O(B * CHUNK * di * N) instead of O(B * S *
+di * N). Decode is the exact single-step recurrence with O(1) state:
+conv tail (B, conv-1, di) + SSM state (B, di, N).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.common import Spec
+
+DT_RANK = 16
+CHUNK = 256
+
+
+def ssm_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    return {
+        "in_proj": Spec((d, 2, di), ("embed", None, "ssm_inner")),
+        "conv_w": Spec((cfg.ssm_conv, di), ("conv", "ssm_inner")),
+        "x_proj": Spec((di, DT_RANK + 2 * n), ("ssm_inner", None)),
+        "dt_proj": Spec((DT_RANK, di), (None, "ssm_inner")),
+        "dt_bias": Spec((di,), ("ssm_inner",), init="zeros"),
+        "a_log": Spec((di, n), ("ssm_inner", "ssm_state"), init="small",
+                      dtype=jnp.float32),
+        "d_skip": Spec((di,), ("ssm_inner",), init="ones", dtype=jnp.float32),
+        "out_proj": Spec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _ssm_inputs(cfg, p, xz):
+    """Gate/state projections. xz: post-conv activations (B, c, di)."""
+    n = cfg.ssm_state
+    dbc = jnp.einsum("bsi,ir->bsr", xz, p["x_proj"])
+    dt_low, bmat, cmat = jnp.split(dbc, [DT_RANK, DT_RANK + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_low, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                     # (B,c,di)
+    a = -jnp.exp(p["a_log"])                                    # (di,N)
+    da = jnp.exp(dt[..., None] * a)                             # (B,c,di,N)
+    dbx = (dt * xz.astype(jnp.float32))[..., None] \
+        * bmat.astype(jnp.float32)[:, :, None, :]
+    return da, dbx, cmat.astype(jnp.float32)
+
+
+def _causal_conv(p, x, conv_state=None):
+    """Depthwise causal conv. x:(B,S,di); conv_state:(B,K-1,di) or None."""
+    k = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def ssm_apply(cfg: ModelConfig, p, x: jnp.ndarray, mode: str,
+              cache: Optional[dict]) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B,S,d). cache: {"conv": (B,K-1,di), "ssm": (B,di,N)} for decode."""
+    b, s, d = x.shape
+    proj = constrain(jnp.einsum("bsd,dzi->bszi", x, p["in_proj"]),
+                     "batch", None, None, "ssm_inner")
+    xin, z = proj[:, :, 0], proj[:, :, 1]
+
+    if mode == "decode":
+        xc, conv_state = _causal_conv(p, xin, cache["conv"])
+        da, dbx, cmat = _ssm_inputs(cfg, p, xc)
+        h = cache["ssm"].astype(jnp.float32) * da[:, 0] + dbx[:, 0]  # (B,di,N)
+        y = jnp.einsum("bin,bn->bi", h, cmat[:, 0])[:, None]
+        xc_last, h_last = xc, h
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                     "ssm": h.astype(cache["ssm"].dtype)}
+    else:
+        xc, conv_tail = _causal_conv(p, xin, None)
+        y, h_last = _chunked_ssm(cfg, p, xc)
+        xc_last = xc
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": conv_tail.astype(jnp.bfloat16),
+                         "ssm": h_last.astype(jnp.bfloat16)}
+    y = y + xc_last.astype(jnp.float32) * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"]), new_cache
+
+
+def _chunked_ssm(cfg, p, xc):
+    """Chunked selective scan. xc: (B,S,di) post-conv. -> y (B,S,di) fp32,
+    final state (B,di,N) fp32."""
+    b, s, di = xc.shape
+    n = cfg.ssm_state
+    c = min(CHUNK, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    xcc = xc.reshape(b, nc, c, di).transpose(1, 0, 2, 3)         # (nc,B,c,di)
+
+    def chunk_step(h0, x_blk):
+        da, dbx, cmat = _ssm_inputs(cfg, p, x_blk)               # (B,c,di,N)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h = constrain(a_cum * h0[:, None] + b_cum,
+                      "batch", None, "ssm_inner", None)          # (B,c,di,N)
+        y = constrain(jnp.einsum("bsin,bsn->bsi", h, cmat),
+                      "batch", None, "ssm_inner")                # (B,c,di)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_step, h0, xcc)
+    return ys.transpose(1, 0, 2, 3).reshape(b, s, di), h_last
+
+
+def ssm_cache_shape(cfg: ModelConfig, batch: int):
+    di = cfg.ssm_expand * cfg.d_model
+    return {"conv": (batch, cfg.ssm_conv - 1, di),
+            "ssm": (batch, di, cfg.ssm_state)}

@@ -1,0 +1,343 @@
+"""Model assembly: embeddings -> layer stack -> head, for all families.
+
+Homogeneous stacks (dense / moe / mla / hybrid / encoder / vlm) store layer
+parameters with a leading ``layers`` axis and run under ``lax.scan`` with
+full rematerialization, so HLO size and activation memory are O(1) in depth.
+xLSTM stacks are heterogeneous (alternating mLSTM/sLSTM) and use a Python
+loop (12 layers).
+
+``forward(cfg, params, batch, mode, cache, cache_len_total)``:
+  mode="train"   -> (loss, metrics)
+  mode="prefill" -> (last-position logits, cache)
+  mode="decode"  -> (logits, new_cache)   [batch["pos"] = scalar position]
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import attention, moe, ssm, xlstm
+from repro.models.common import (
+    Spec, rms_norm, swiglu, softmax_xent, stack_layer_specs,
+    tree_abstract, tree_axes, tree_init,
+)
+
+VIT_HIDDEN = 1024    # stub InternViT output dim
+AUDIO_HIDDEN = 512   # stub conv-frontend output dim
+
+SCANNED_FAMILIES = ("dense", "moe", "mla", "hybrid", "encoder_audio", "vlm")
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def layer_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = {"ln1": Spec((cfg.d_model,), ("embed",), init="ones"),
+                         "ln2": Spec((cfg.d_model,), ("embed",), init="ones")}
+    if cfg.family == "mla":
+        s["attn"] = attention.mla_specs(cfg)
+    else:
+        s["attn"] = attention.gqa_specs(cfg)
+    if cfg.family == "hybrid":
+        s["ssm"] = ssm.ssm_specs(cfg)
+    if cfg.family == "moe":
+        s["moe"] = moe.moe_specs(cfg)
+    elif cfg.d_ff > 0:
+        s["mlp"] = {
+            "gate": Spec((cfg.d_model, cfg.d_ff), ("embed", "mlp")),
+            "up": Spec((cfg.d_model, cfg.d_ff), ("embed", "mlp")),
+            "down": Spec((cfg.d_ff, cfg.d_model), ("mlp", "embed")),
+        }
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab
+    specs: Dict[str, Any] = {
+        "embed": Spec((v, d), ("vocab" if cfg.tie_embeddings else "vocab_in",
+                               "embed")),
+        "final_norm": Spec((d,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = Spec((d, v), ("embed", "vocab"))
+    if cfg.frontend == "vit_patches":
+        specs["vision_adapter"] = Spec((VIT_HIDDEN, d), (None, "embed"))
+    if cfg.frontend == "audio_frames":
+        specs["audio_adapter"] = Spec((AUDIO_HIDDEN, d), (None, "embed"))
+    if cfg.family == "ssm_xlstm":
+        specs["blocks"] = [
+            xlstm.mlstm_specs(cfg) if xlstm.is_mlstm_layer(cfg, i)
+            else xlstm.slstm_specs(cfg)
+            for i in range(cfg.n_layers)]
+    else:
+        specs["layers"] = stack_layer_specs(layer_specs(cfg), cfg.n_layers)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def cache_struct(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Shapes (python ints) for the decode cache; no allocation."""
+    if cfg.family == "ssm_xlstm":
+        return {"blocks": [
+            (xlstm.mlstm_cache_shape(cfg, batch)
+             if xlstm.is_mlstm_layer(cfg, i)
+             else xlstm.slstm_cache_shape(cfg, batch))
+            for i in range(cfg.n_layers)]}
+    if cfg.family == "mla":
+        per = attention.mla_cache_shape(cfg, batch, seq)
+    else:
+        per = attention.gqa_cache_shape(cfg, batch, seq)
+    out = {k: (cfg.n_layers,) + v for k, v in per.items()}
+    if cfg.family == "hybrid":
+        for k, v in ssm.ssm_cache_shape(cfg, batch).items():
+            out["ssm_" + k] = (cfg.n_layers,) + v
+    return out
+
+
+_CACHE_AXES = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "latent": ("layers", "batch", "kv_seq", "kv_lora"),
+    "k_rope": ("layers", "batch", "kv_seq", None, None),
+    "ssm_conv": ("layers", "batch", None, "ssm_inner"),
+    "ssm_ssm": ("layers", "batch", "ssm_inner", "ssm_state"),
+}
+
+
+def cache_axes(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    struct = cache_struct(cfg, batch, seq)
+    if cfg.family == "ssm_xlstm":
+        return {"blocks": [
+            {k: ("batch",) + (None,) * (len(v) - 1) for k, v in blk.items()}
+            for blk in struct["blocks"]]}
+    return {k: _CACHE_AXES[k] for k in struct}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int,
+                   dtype=jnp.bfloat16) -> Dict[str, Any]:
+    def mk(shape):
+        return jax.ShapeDtypeStruct(shape, dtype)
+    struct = cache_struct(cfg, batch, seq)
+    if cfg.family == "ssm_xlstm":
+        return {"blocks": [{k: mk(v) for k, v in blk.items()}
+                           for blk in struct["blocks"]]}
+    return {k: mk(v) for k, v in struct.items()}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, seq, dtype))
+
+
+# ---------------------------------------------------------------------------
+# layer body (scanned families)
+# ---------------------------------------------------------------------------
+
+def _layer_body(cfg: ModelConfig, mode: str, cache_len_total: int,
+                x, lp, lcache, pos):
+    aux = {}
+    # residual stream anchor; under the "sp" preset seq_res -> model shards
+    # the saved remat activations 16x (Megatron sequence parallelism)
+    x = constrain(x, "batch", "seq_res", "act_embed")
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn_cache = None
+    if lcache is not None and cfg.family != "hybrid":
+        attn_cache = lcache
+    elif lcache is not None:
+        attn_cache = {"k": lcache["k"], "v": lcache["v"]}
+    if cfg.family == "mla":
+        attn_out, new_attn = attention.mla_apply(
+            cfg, lp["attn"], h, mode, attn_cache, pos, cache_len_total)
+    else:
+        attn_out, new_attn = attention.gqa_apply(
+            cfg, lp["attn"], h, mode, attn_cache, pos, cache_len_total)
+    if cfg.family == "hybrid":
+        ssm_cache = None
+        if lcache is not None:
+            ssm_cache = {"conv": lcache["ssm_conv"], "ssm": lcache["ssm_ssm"]}
+        ssm_out, new_ssm = ssm.ssm_apply(cfg, lp["ssm"], h, mode, ssm_cache)
+        x = x + 0.5 * (attn_out + ssm_out)
+    else:
+        x = x + attn_out
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe.moe_apply(cfg, lp["moe"], h2)
+    elif cfg.d_ff > 0:
+        y = swiglu(h2, lp["mlp"]["gate"], lp["mlp"]["up"], lp["mlp"]["down"])
+    else:
+        y = jnp.zeros_like(x)
+    x = x + y
+
+    new_cache = None
+    if new_attn is not None:
+        new_cache = dict(new_attn)
+        if cfg.family == "hybrid":
+            new_cache = {"k": new_attn["k"], "v": new_attn["v"],
+                         "ssm_conv": new_ssm["conv"], "ssm_ssm": new_ssm["ssm"]}
+    return x, new_cache, aux
+
+
+def _run_stack(cfg, params, x, mode, cache, pos, cache_len_total):
+    """Scan the homogeneous layer stack. Returns (x, new_cache, aux).
+
+    ``cfg.remat_block`` layers form one rematerialization unit: only the
+    unit's input is saved for backward, so saved-activation memory scales
+    as L / remat_block (at the cost of re-running the whole unit forward in
+    backward — flops unchanged under full remat, one extra unit-input copy).
+    """
+    has_cache = cache is not None and mode in ("decode",)
+    emits_cache = mode in ("decode", "prefill")
+    rb = max(1, cfg.remat_block)
+    n_units = cfg.n_layers // rb
+    assert cfg.n_layers % rb == 0, (cfg.n_layers, rb)
+
+    def unit_body(xcur, lp_unit, lcache_unit, pos):
+        caches = []
+        aux_tot = {}
+        for j in range(rb):
+            lp = jax.tree.map(lambda t: t[j], lp_unit)
+            lcache = jax.tree.map(lambda t: t[j], lcache_unit) \
+                if lcache_unit is not None else None
+            xcur, new_lcache, aux = _layer_body(
+                cfg, mode, cache_len_total, xcur, lp, lcache, pos)
+            caches.append(new_lcache)
+            for k, v in (aux or {}).items():
+                aux_tot[k] = aux_tot.get(k, 0.0) + v
+        if caches[0] is not None:
+            caches = jax.tree.map(lambda *ts: jnp.stack(ts), *caches)
+        else:
+            caches = None
+        return xcur, caches, aux_tot
+
+    body = jax.checkpoint(partial(unit_body, pos=pos))
+
+    def scan_fn(carry, xs):
+        xcur, aux_acc = carry
+        lp_unit, lcache_unit = xs
+        xnew, new_lcache, aux = body(xcur, lp_unit, lcache_unit)
+        aux_acc = {k: aux_acc.get(k, 0.0) + v for k, v in aux.items()} \
+            if aux else aux_acc
+        return (xnew, aux_acc), new_lcache
+
+    aux0 = {}
+    if cfg.family == "moe":
+        aux0 = {"moe_lb_loss": jnp.zeros((), jnp.float32),
+                "moe_z_loss": jnp.zeros((), jnp.float32),
+                "moe_drop_frac": jnp.zeros((), jnp.float32)}
+
+    def to_units(t):
+        return t.reshape(n_units, rb, *t.shape[1:])
+
+    lp_units = jax.tree.map(to_units, params["layers"])
+    xs_cache = jax.tree.map(to_units, cache) if has_cache else None
+    (x, aux), new_cache = jax.lax.scan(scan_fn, (x, aux0),
+                                       (lp_units, xs_cache))
+    if not emits_cache:
+        new_cache = None
+    elif new_cache is not None:
+        new_cache = jax.tree.map(
+            lambda t: t.reshape(cfg.n_layers, *t.shape[2:]), new_cache)
+    if cfg.family == "moe":
+        aux = {k: v / cfg.n_layers for k, v in aux.items()}
+    return x, new_cache, aux
+
+
+def _run_xlstm(cfg, params, x, mode, cache):
+    new_blocks = []
+    blocks_cache = cache["blocks"] if cache is not None else [None] * cfg.n_layers
+    for i, bp in enumerate(params["blocks"]):
+        fn = xlstm.mlstm_apply if xlstm.is_mlstm_layer(cfg, i) else xlstm.slstm_apply
+        x, bc = jax.checkpoint(partial(fn, cfg), static_argnums=(2,))(
+            bp, x, mode, blocks_cache[i])
+        new_blocks.append(bc)
+    if mode in ("decode", "prefill"):
+        return x, {"blocks": new_blocks}, {}
+    return x, None, {}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, batch, mode):
+    if cfg.frontend == "audio_frames":
+        return constrain(jnp.einsum("bsf,fd->bsd", batch["frames"],
+                                    params["audio_adapter"]),
+                         "batch", None, "act_embed")
+    tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+    tok = constrain(tok, "batch", None, "act_embed")
+    if cfg.frontend == "vit_patches" and mode != "decode":
+        vis = jnp.einsum("bpf,fd->bpd", batch["patches"],
+                         params["vision_adapter"])
+        return constrain(jnp.concatenate([vis, tok], axis=1),
+                         "batch", None, "act_embed")
+    return tok
+
+
+def _logits(cfg, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    out = jnp.einsum("...d,dv->...v", x, head)
+    return constrain(out, *(("batch",) + (None,) * (out.ndim - 2) + ("vocab",)))
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, Any], mode: str,
+            cache=None, cache_len_total: int = 0):
+    x = _embed_inputs(cfg, params, batch, mode)
+    pos = batch.get("pos", 0)
+
+    if cfg.family == "ssm_xlstm":
+        x, new_cache, aux = _run_xlstm(cfg, params, x, mode, cache)
+    else:
+        x, new_cache, aux = _run_stack(cfg, params, x, mode, cache, pos,
+                                       cache_len_total)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    if mode == "train":
+        if cfg.frontend == "vit_patches":
+            x = x[:, cfg.n_vision_tokens:]       # loss on text positions only
+        logits = _logits(cfg, params, x)
+        loss = softmax_xent(logits, batch["labels"], batch.get("mask"))
+        metrics = {"ce_loss": loss}
+        if cfg.family == "moe":
+            loss = loss + 0.01 * aux["moe_lb_loss"] \
+                + cfg.router_aux_weight * aux["moe_z_loss"]
+            metrics.update(aux)
+        metrics["loss"] = loss
+        return loss, metrics
+
+    if mode == "encode":  # encoder-only serving: per-position unit logits
+        return _logits(cfg, params, x), None
+
+    if mode == "prefill":
+        logits = _logits(cfg, params, x[:, -1])
+        return logits, new_cache
+
+    # decode
+    logits = _logits(cfg, params, x[:, -1])
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# public param API
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    return tree_init(param_specs(cfg), key)
+
+
+def abstract_params(cfg: ModelConfig):
+    return tree_abstract(param_specs(cfg))
+
+
+def param_axes(cfg: ModelConfig):
+    return tree_axes(param_specs(cfg))

@@ -1,0 +1,387 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel training form) and
+sLSTM (scalar memory, exact recurrent scan), per arXiv:2405.04517.
+
+Block-diagonal (per-head) q/k/v and recurrent projections follow the official
+block design. All recurrences are numerically stabilized with a running max
+state m. Decode state is O(1) per token, so long_500k decode runs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.models import common
+from repro.models.common import Spec
+
+CHUNK = 256
+NEG = -1e30
+
+
+def _logsig(x):
+    return -jax.nn.softplus(-x)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    d = cfg.d_model
+    di = int(cfg.proj_factor_mlstm * d)
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "ln": Spec((d,), ("embed",), init="ones"),
+        "w_up": Spec((d, 2, di), ("embed", None, "ssm_inner")),
+        "conv_w": Spec((4, di), ("conv", "ssm_inner")),
+        "wq": Spec((h, dh, dh), ("heads", "head_dim", None)),
+        "wk": Spec((h, dh, dh), ("heads", "head_dim", None)),
+        "wv": Spec((h, dh, dh), ("heads", "head_dim", None)),
+        "w_i": Spec((di, h), ("ssm_inner", "heads"), init="small"),
+        "w_f": Spec((di, h), ("ssm_inner", "heads"), init="small"),
+        "b_i": Spec((h,), ("heads",), init="zeros"),
+        "b_f": Spec((h,), ("heads",), init="ones"),
+        "out_norm": Spec((di,), ("ssm_inner",), init="ones"),
+        "w_down": Spec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mlstm_qkvif(cfg, p, x_conv, x_raw):
+    """Per-head projections. x_*: (B,S,di). Returns q,k,v (B,S,H,dh); i,f (B,S,H)."""
+    h = cfg.n_heads
+    b, s, di = x_conv.shape
+    dh = di // h
+    xch = x_conv.reshape(b, s, h, dh)
+    xrh = x_raw.reshape(b, s, h, dh)
+    q = jnp.einsum("bshd,hde->bshe", xch, p["wq"])
+    k = jnp.einsum("bshd,hde->bshe", xch, p["wk"]) / np.sqrt(dh)
+    v = jnp.einsum("bshd,hde->bshe", xrh, p["wv"])
+    i = jnp.einsum("bsi,ih->bsh", x_raw, p["w_i"]).astype(jnp.float32) + p["b_i"].astype(jnp.float32)
+    f = jnp.einsum("bsi,ih->bsh", x_raw, p["w_f"]).astype(jnp.float32) + p["b_f"].astype(jnp.float32)
+    return q, k, v, i, f
+
+
+def _mlstm_chunk(carry, blk):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    carry: C (B,H,dh,dh), n (B,H,dh), m (B,H)  [true state = exp(m) * C]
+    blk: q,k,v (B,c,H,dh) ; i,f (B,c,H)
+    """
+    C, n, m = carry
+    q, k, v, i, f = blk
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c = q.shape[1]
+    logf = _logsig(f)                                            # (B,c,H)
+    b_cum = jnp.cumsum(logf, axis=1)                             # (B,c,H)
+    # D[t,s] = b_t - b_s + i_s   for s <= t
+    D = b_cum[:, :, None] - b_cum[:, None, :] + i[:, None, :]    # (B,t,s,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    D = jnp.where(tri[None, :, :, None], D, NEG)
+    m_intra = jnp.max(D, axis=2)                                 # (B,t,H)
+    m_inter = b_cum + m[:, None]                                 # (B,t,H)
+    m_t = jnp.maximum(jnp.maximum(m_intra, m_inter), -NEG * 0)   # (B,t,H)
+    m_t = jnp.maximum(m_intra, m_inter)
+    w = jnp.exp(D - m_t[:, :, None, :])                          # (B,t,s,H)
+    scores = jnp.einsum("bthd,bshd->btsh", qf, kf)               # (B,t,s,H)
+    y_intra = jnp.einsum("btsh,btsh,bshd->bthd", w, scores, vf)
+    inter_scale = jnp.exp(m_inter - m_t)                         # (B,t,H)
+    y_inter = jnp.einsum("bthd,bhde->bthe", qf, C) * inter_scale[..., None]
+    n_t = jnp.einsum("btsh,bshd->bthd", w, kf) \
+        + n[:, None] * inter_scale[..., None]                    # (B,t,H,dh)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", n_t, qf)),
+                        jnp.exp(-m_t))
+    y = (y_intra + y_inter) / denom[..., None]                   # (B,t,H,dh)
+    # ---- state update to end of chunk ----
+    b_last = b_cum[:, -1]                                        # (B,H)
+    dec = b_last[:, None] - b_cum + i                            # (B,s,H)
+    m_new = jnp.maximum(b_last + m, jnp.max(dec, axis=1))        # (B,H)
+    wC = jnp.exp(dec - m_new[:, None])                           # (B,s,H)
+    # C stored k-major: C[d, e] = sum_s decay_s * k_s[d] * v_s[e], so queries
+    # contract over the k dimension (first index)
+    C_new = C * jnp.exp(b_last + m - m_new)[..., None, None] \
+        + jnp.einsum("bsh,bshd,bshe->bhde", wC, kf, vf)
+    n_new = n * jnp.exp(b_last + m - m_new)[..., None] \
+        + jnp.einsum("bsh,bshd->bhd", wC, kf)
+    return (C_new, n_new, m_new), y
+
+
+def mlstm_apply(cfg: ModelConfig, p, x, mode: str, cache: Optional[dict]
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d = x.shape
+    hh = cfg.n_heads
+    di = int(cfg.proj_factor_mlstm * d)
+    dh = di // hh
+    xn = common.rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,dzi->bszi", xn, p["w_up"])
+    xm, z = proj[:, :, 0], proj[:, :, 1]
+    # causal conv (kernel 4) on the mlstm branch; decode carries the tail
+    k4 = p["conv_w"].shape[0]
+    if mode == "decode" and cache is not None:
+        pad = cache["conv"].astype(xm.dtype)
+    else:
+        pad = jnp.zeros((b, k4 - 1, di), xm.dtype)
+    xp = jnp.concatenate([pad, xm], axis=1)
+    conv_tail = xp[:, -(k4 - 1):]
+    xc = jax.nn.silu(sum(xp[:, i:i + s] * p["conv_w"][i] for i in range(k4)))
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(cfg, p, xc, xm)
+
+    if mode == "decode":
+        C, n, m = (cache["C"].astype(jnp.float32),
+                   cache["n"].astype(jnp.float32),
+                   cache["m"].astype(jnp.float32))
+        logf = _logsig(f_pre[:, 0])
+        m_new = jnp.maximum(logf + m, i_pre[:, 0])
+        fs = jnp.exp(logf + m - m_new)[..., None, None]
+        is_ = jnp.exp(i_pre[:, 0] - m_new)[..., None, None]
+        kf = k[:, 0].astype(jnp.float32)
+        vf = v[:, 0].astype(jnp.float32)
+        C_new = fs * C + is_ * jnp.einsum("bhd,bhe->bhde", kf, vf)
+        n_new = fs[..., 0] * n + is_[..., 0] * kf
+        qf = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, qf)),
+                          jnp.exp(-m_new))
+        y = (num / den[..., None])[:, None]                      # (B,1,H,dh)
+        new_cache = {"C": C_new.astype(cache["C"].dtype),
+                     "n": n_new.astype(cache["n"].dtype),
+                     "m": m_new.astype(cache["m"].dtype),
+                     "conv": conv_tail.astype(cache["conv"].dtype)}
+    else:
+        c = min(CHUNK, s)
+        assert s % c == 0
+        nc = s // c
+
+        def to_chunks(t):
+            return t.reshape(b, nc, c, *t.shape[2:]).swapaxes(0, 1)
+
+        carry0 = (jnp.zeros((b, hh, dh, dh), jnp.float32),
+                  jnp.zeros((b, hh, dh), jnp.float32),
+                  jnp.zeros((b, hh), jnp.float32))
+        carry, ys = jax.lax.scan(
+            _mlstm_chunk, carry0,
+            tuple(map(to_chunks, (q, k, v, i_pre, f_pre))))
+        y = ys.swapaxes(0, 1).reshape(b, s, hh, dh)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"C": carry[0].astype(jnp.float32),
+                         "n": carry[1].astype(jnp.float32),
+                         "m": carry[2].astype(jnp.float32),
+                         "conv": conv_tail.astype(jnp.bfloat16)}
+    y = y.reshape(b, -1, di).astype(x.dtype)
+    y = common.rms_norm(y, p["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return x + jnp.einsum("bsi,id->bsd", y, p["w_down"]), new_cache
+
+
+def mlstm_cache_shape(cfg: ModelConfig, batch: int):
+    di = int(cfg.proj_factor_mlstm * cfg.d_model)
+    h = cfg.n_heads
+    dh = di // h
+    return {"C": (batch, h, dh, dh), "n": (batch, h, dh), "m": (batch, h),
+            "conv": (batch, 3, di)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ff = int(cfg.proj_factor_slstm * d)
+    return {
+        "ln": Spec((d,), ("embed",), init="ones"),
+        "w_gates": Spec((d, 4, d), ("embed", None, None)),        # z,i,f,o
+        "r_gates": Spec((4, h, dh, dh), (None, "heads", "head_dim", None),
+                        init="small"),
+        "b_gates": Spec((4, d), (None, None), init="zeros"),
+        "ln_ff": Spec((d,), ("embed",), init="ones"),
+        "ff_gate": Spec((d, ff), ("embed", "mlp")),
+        "ff_up": Spec((d, ff), ("embed", "mlp")),
+        "ff_down": Spec((ff, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell_raw(n_heads, r_gates, b_gates, x_t, state):
+    """One sLSTM step. x_t: (B,4,d) pre-projected gates; state: 4x (B,d)."""
+    h_prev, c_prev, n_prev, m_prev = state
+    b = x_t.shape[0]
+    d = h_prev.shape[-1]
+    dh = d // n_heads
+    hp = h_prev.reshape(b, n_heads, dh)
+    rec = jnp.einsum("ghde,bhd->gbhe", r_gates.astype(jnp.float32),
+                     hp.astype(jnp.float32)).reshape(4, b, d)
+    pre = x_t.astype(jnp.float32).swapaxes(0, 1) + rec \
+        + b_gates.astype(jnp.float32)[:, None]
+    z_pre, i_pre, f_pre, o_pre = pre[0], pre[1], pre[2], pre[3]
+    z = jnp.tanh(z_pre)
+    logf = _logsig(f_pre)
+    m_t = jnp.maximum(logf + m_prev, i_pre)
+    f_s = jnp.exp(logf + m_prev - m_t)
+    i_s = jnp.exp(i_pre - m_t)
+    c_t = f_s * c_prev + i_s * z
+    n_t = f_s * n_prev + i_s
+    h_t = jax.nn.sigmoid(o_pre) * c_t / jnp.maximum(n_t, 1e-6)
+    return h_t, c_t, n_t, m_t
+
+
+def _slstm_cell(cfg, p, x_t, state):
+    return _slstm_cell_raw(cfg.n_heads, p["r_gates"], p["b_gates"],
+                           x_t, state)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM sequence with deferred recurrent-weight-grad reduction.
+#
+# A plain scan makes XLA emit an all-reduce of dR (the recurrent matrix
+# gradient, partial over the sharded batch) at EVERY timestep of the
+# backward while-loop (measured: 24576 ARs on train_4k = the entire
+# collective cost of the cell). This custom VJP saves the state sequence in
+# forward, accumulates dR/db LOCALLY in the backward scan carry, and lets
+# the (single) cross-device reduction happen after the loop.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _slstm_sequence(n_heads, r_gates, b_gates, gates_x, state0):
+    """gates_x: (S, B, 4, d). Returns (ys (S,B,d), final state)."""
+    def step(state, x_t):
+        new = _slstm_cell_raw(n_heads, r_gates, b_gates, x_t, state)
+        return new, new[0]
+
+    final, ys = jax.lax.scan(step, state0, gates_x)
+    return ys, final
+
+
+def _slstm_pre(n_heads, r_gates, b_gates, x_t, h_prev):
+    """Gate pre-activations: W x (precomputed) + R h_{t-1} + b. -> (4,B,d)."""
+    b = x_t.shape[0]
+    d = h_prev.shape[-1]
+    hp = h_prev.reshape(b, n_heads, d // n_heads)
+    rec = jnp.einsum("ghde,bhd->gbhe", r_gates.astype(jnp.float32),
+                     hp.astype(jnp.float32)).reshape(4, b, d)
+    return x_t.astype(jnp.float32).swapaxes(0, 1) + rec \
+        + b_gates.astype(jnp.float32)[:, None]
+
+
+def _slstm_post(pre, state):
+    """State update given pre-activations. pre: (4,B,d)."""
+    _, c_prev, n_prev, m_prev = state
+    z = jnp.tanh(pre[0])
+    logf = _logsig(pre[2])
+    m_t = jnp.maximum(logf + m_prev, pre[1])
+    f_s = jnp.exp(logf + m_prev - m_t)
+    i_s = jnp.exp(pre[1] - m_t)
+    c_t = f_s * c_prev + i_s * z
+    n_t = f_s * n_prev + i_s
+    h_t = jax.nn.sigmoid(pre[3]) * c_t / jnp.maximum(n_t, 1e-6)
+    return h_t, c_t, n_t, m_t
+
+
+def _slstm_seq_fwd(n_heads, r_gates, b_gates, gates_x, state0):
+    def step(state, x_t):
+        new = _slstm_cell_raw(n_heads, r_gates, b_gates, x_t, state)
+        return new, new
+
+    final, states_seq = jax.lax.scan(step, state0, gates_x)
+    ys = states_seq[0]
+    return (ys, final), (r_gates, b_gates, gates_x, state0, states_seq)
+
+
+def _slstm_seq_bwd(n_heads, res, cots):
+    """Backward scan emits per-step d_pre; ALL weight-gradient contractions
+    over (seq, batch) happen once after the loop, so the sharded-batch
+    reduction is a single all-reduce instead of one per timestep."""
+    r_gates, b_gates, gates_x, state0, states_seq = res
+    g_ys, g_final = cots
+    s, bsz = gates_x.shape[0], gates_x.shape[1]
+    d = gates_x.shape[-1]
+    dh = d // n_heads
+    rf = r_gates.astype(jnp.float32)
+
+    def prev_state(t):
+        return jax.tree.map(
+            lambda seq, s0: jnp.where(t > 0, seq[jnp.maximum(t - 1, 0)], s0),
+            states_seq, state0)
+
+    def bwd_step(d_state, t):
+        d_state = (d_state[0] + g_ys[t],) + tuple(d_state[1:])
+        sp = prev_state(t)
+        pre = _slstm_pre(n_heads, r_gates, b_gates, gates_x[t], sp[0])
+
+        _, vjp_fn = jax.vjp(_slstm_post, pre, sp)
+        d_pre, d_prev = vjp_fn(tuple(d_state))
+        # h_{t-1} also feeds the recurrence: dh += R^T d_pre  (local einsum)
+        dpg = d_pre.reshape(4, bsz, n_heads, dh)
+        dh_prev = jnp.einsum("ghde,gbhe->bhd", rf, dpg).reshape(bsz, d)
+        d_prev = (d_prev[0] + dh_prev,) + tuple(d_prev[1:])
+        return d_prev, d_pre
+
+    (d_prev), d_pre_rev = jax.lax.scan(
+        bwd_step, tuple(g_final), jnp.arange(s - 1, -1, -1))
+    d_pre_seq = d_pre_rev[::-1]                       # (S,4,B,d)
+
+    # deferred weight-grad contractions: ONE reduction over (S, B)
+    h_prev_seq = jnp.concatenate(
+        [state0[0][None], states_seq[0][:-1]], axis=0)  # (S,B,d)
+    hps = h_prev_seq.reshape(s, bsz, n_heads, dh)
+    dps = d_pre_seq.reshape(s, 4, bsz, n_heads, dh)
+    dR = jnp.einsum("sgbhe,sbhd->ghde", dps, hps.astype(jnp.float32))
+    db = jnp.sum(d_pre_seq, axis=(0, 2))              # (4,d)
+    dxs = d_pre_seq.swapaxes(1, 2)                    # (S,B,4,d)
+    return (dR.astype(r_gates.dtype), db.astype(b_gates.dtype),
+            dxs.astype(gates_x.dtype), d_prev)
+
+
+_slstm_sequence.defvjp(_slstm_seq_fwd, _slstm_seq_bwd)
+
+
+def slstm_apply(cfg: ModelConfig, p, x, mode: str, cache: Optional[dict]
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d = x.shape
+    xn = common.rms_norm(x, p["ln"], cfg.norm_eps)
+    gates_in = jnp.einsum("bsd,dge->bsge", xn, p["w_gates"])      # (B,S,4,d)
+
+    if cache is not None and mode == "decode":
+        state = (cache["h"].astype(jnp.float32), cache["c"].astype(jnp.float32),
+                 cache["n"].astype(jnp.float32), cache["m"].astype(jnp.float32))
+        h_t, c_t, n_t, m_t = _slstm_cell(cfg, p, gates_in[:, 0], state)
+        ys = h_t[:, None]
+        new_cache = {"h": h_t.astype(cache["h"].dtype),
+                     "c": c_t.astype(cache["c"].dtype),
+                     "n": n_t.astype(cache["n"].dtype),
+                     "m": m_t.astype(cache["m"].dtype)}
+    else:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state0 = (zeros, zeros, zeros, zeros)
+        ys, state = _slstm_sequence(cfg.n_heads, p["r_gates"], p["b_gates"],
+                                    gates_in.swapaxes(0, 1), state0)
+        ys = ys.swapaxes(0, 1)                                    # (B,S,d)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"h": state[0].astype(jnp.float32),
+                         "c": state[1].astype(jnp.float32),
+                         "n": state[2].astype(jnp.float32),
+                         "m": state[3].astype(jnp.float32)}
+    x = x + ys.astype(x.dtype)
+    # post FFN (gated, pf ~4/3)
+    xf = common.rms_norm(x, p["ln_ff"], cfg.norm_eps)
+    ff = common.swiglu(xf, p["ff_gate"], p["ff_up"], p["ff_down"])
+    return x + ff, new_cache
+
+
+def slstm_cache_shape(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {"h": (batch, d), "c": (batch, d), "n": (batch, d), "m": (batch, d)}
+
+
+def is_mlstm_layer(cfg: ModelConfig, idx: int) -> bool:
+    return idx % cfg.mlstm_every == 0

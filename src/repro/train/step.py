@@ -1,0 +1,108 @@
+"""Step factories: train_step (grad-accum microbatching + AdamW) and
+serve steps (prefill / decode). These are the functions the launcher jits
+with explicit in/out shardings and the dry-run lowers on the production mesh.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import transformer
+from repro.train import optimizer as opt_lib
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        loss, metrics = transformer.forward(cfg, params, batch, "train")
+        return loss, metrics
+    return loss_fn
+
+
+def _split_microbatches(batch: Dict[str, Any], n_mb: int) -> Dict[str, Any]:
+    def split(x):
+        b = x.shape[0]
+        assert b % n_mb == 0, (b, n_mb)
+        return x.reshape(n_mb, b // n_mb, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, adamw: opt_lib.AdamWConfig,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Gradient accumulation runs as a ``lax.scan`` over microbatches; gradients
+    are accumulated in fp32 and averaged. With FSDP/ZeRO rules the gradient
+    reduction crosses the network in bf16 (network dtype), while the AdamW
+    math is fp32 on the local shard.
+    """
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            mb = _split_microbatches(batch, microbatches)
+
+            def accum(carry, mb_batch):
+                gacc, lacc = carry
+                (loss, metrics), grads = grad_fn(params, mb_batch)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+                return (gacc, lacc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), metrics_stack = jax.lax.scan(accum, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: (g / microbatches).astype(jnp.bfloat16),
+                                 gsum)
+            metrics = jax.tree.map(lambda m: m[-1], metrics_stack)
+            metrics["loss"] = lsum / microbatches
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        new_params, new_opt, opt_metrics = opt_lib.apply_updates(
+            adamw, params, grads, opt_state)
+        metrics.update(opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_encode_step(cfg: ModelConfig):
+    """Encoder-only serving: full-sequence unit logits (HuBERT-style)."""
+    def encode_step(params, batch):
+        logits, _ = transformer.forward(cfg, params, batch, "encode")
+        return logits
+    return encode_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, cache = transformer.forward(cfg, params, batch, "prefill")
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, cache_len_total: int):
+    def decode_step(params, cache, batch):
+        logits, new_cache = transformer.forward(
+            cfg, params, batch, "decode", cache=cache,
+            cache_len_total=cache_len_total)
+        return logits, new_cache
+    return decode_step
+
+
+def step_for_shape(cfg: ModelConfig, shape: ShapeSpec,
+                   adamw: Optional[opt_lib.AdamWConfig] = None):
+    """The function the dry-run lowers for a given cell, plus its kind."""
+    if shape.kind == "train":
+        return make_train_step(cfg, adamw or opt_lib.AdamWConfig(),
+                               microbatches=shape.microbatches), "train"
+    if shape.kind == "prefill":
+        if not cfg.supports_decode:      # encoder: no cache semantics
+            return make_encode_step(cfg), "encode"
+        return make_prefill_step(cfg), "prefill"
+    return make_decode_step(cfg, shape.seq_len), "decode"

@@ -1,0 +1,125 @@
+"""Roofline instrumentation: jaxpr FLOP counting (exact on known programs,
+scan-trip-count aware) and HLO collective parsing with loop multipliers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import analysis
+
+
+class TestJaxprCost:
+    def test_matmul_flops_exact(self):
+        def f(a, b):
+            return a @ b
+
+        a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+        b = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+        c = analysis.jaxpr_cost(f, a, b)
+        assert c["dot_flops"] == 2 * 8 * 16 * 32
+
+    def test_scan_multiplies_trip_count(self):
+        def f(x, w):
+            def body(carry, _):
+                return carry @ w, None
+            out, _ = jax.lax.scan(body, x, None, length=7)
+            return out
+
+        x = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        w = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        c = analysis.jaxpr_cost(f, x, w)
+        assert c["dot_flops"] == 7 * 2 * 4 * 4 * 4
+
+    def test_nested_scan(self):
+        def f(x, w):
+            def inner(c, _):
+                return c @ w, None
+
+            def outer(c, _):
+                c2, _ = jax.lax.scan(inner, c, None, length=3)
+                return c2, None
+
+            out, _ = jax.lax.scan(outer, x, None, length=5)
+            return out
+
+        x = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+        w = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+        c = analysis.jaxpr_cost(f, x, w)
+        assert c["dot_flops"] == 15 * 2 * 2 * 2 * 2
+
+    def test_grad_counts_backward_flops(self):
+        def loss(w, x):
+            return jnp.sum((x @ w) ** 2)
+
+        g = jax.grad(loss)
+        w = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+        x = jax.ShapeDtypeStruct((4, 8), jnp.float32)
+        fwd = analysis.jaxpr_cost(loss, w, x)["dot_flops"]
+        bwd = analysis.jaxpr_cost(g, w, x)["dot_flops"]
+        assert bwd >= 2 * fwd   # grad ~= fwd + 2 transposed matmuls
+
+    def test_hbm_bytes_counts_dot_operands(self):
+        def f(a, b):
+            return a @ b
+
+        a = jax.ShapeDtypeStruct((8, 16), jnp.bfloat16)
+        b = jax.ShapeDtypeStruct((16, 32), jnp.bfloat16)
+        c = analysis.jaxpr_cost(f, a, b)
+        assert c["hbm_bytes"] == (8 * 16 + 16 * 32 + 8 * 32) * 2
+
+
+SYNTH_HLO = """\
+HloModule test
+
+%region_body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[8]{0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%sum
+  ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+}
+
+%region_cond (p: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %ag = f32[32]{0} all-gather(%a), replica_groups=[2,4]<=[8], dimensions={0}
+  %w = (s32[], f32[8]) while(%init), condition=%region_cond, body=%region_body
+  ROOT %out = f32[8] get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestHloCollectives:
+    def test_loop_trip_count_multiplies(self):
+        agg = analysis.hlo_collective_bytes(SYNTH_HLO)
+        assert agg["all-gather"]["count"] == 1
+        assert agg["all-gather"]["bytes"] == 32 * 4
+        # the while body runs 5 times
+        assert agg["all-reduce"]["count"] == 5
+        assert agg["all-reduce"]["bytes"] == 5 * 8 * 4
+
+    def test_bf16_equiv_halves_f32(self):
+        agg = analysis.hlo_collective_bytes(SYNTH_HLO)
+        assert agg["total_bytes_bf16eq"] == agg["total_bytes"] / 2
+
+    def test_top_collectives_view(self):
+        rows = analysis.top_collectives(SYNTH_HLO, 5)
+        assert rows
+        assert rows[0]["bytes"] >= rows[-1]["bytes"]
+
+
+class TestModelFlops:
+    def test_train_formula(self):
+        from repro.configs import get_config
+        from repro.configs.shapes import SHAPES
+        cfg = get_config("granite-3-8b")
+        mf = analysis.model_flops(cfg, SHAPES["train_4k"])
+        assert mf == pytest.approx(6 * cfg.param_count() * 256 * 4096)
+
+    def test_moe_uses_active_params(self):
+        from repro.configs import get_config
+        from repro.configs.shapes import SHAPES
+        cfg = get_config("qwen3-moe-235b-a22b")
+        mf = analysis.model_flops(cfg, SHAPES["train_4k"])
+        assert mf < 6 * cfg.param_count() * 256 * 4096 / 5

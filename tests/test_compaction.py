@@ -1,0 +1,104 @@
+"""Compaction execution: binpack partition integrity, conflict retry,
+atomic table-scope commits, failure injection, snapshot-expiry healing."""
+
+import pytest
+
+from repro.lst import Catalog, CommitConflict, InMemoryStore
+from repro.lst import compaction as comp
+from repro.lst.files import DataFile
+from repro.lst.workload import SimClock
+
+MB = 1 << 20
+
+
+def make_table(granularity="table", partition_spec="p"):
+    clock = SimClock()
+    store = InMemoryStore()
+    cat = Catalog(store, now_fn=clock.now)
+    t = cat.create_table("ns", "t", partition_spec,
+                         properties={"conflict_granularity": granularity})
+    t.now_fn = clock.now
+    return cat, t, store
+
+
+def add_files(t, n, size=4 * MB, parts=("a", "b")):
+    files = []
+    for i in range(n):
+        path = f"{t.table_id}/data/f{i}.bin"
+        t.store.put(path, b"x" * 128)
+        files.append(DataFile(path, size, 10, parts[i % len(parts)]))
+    t.append(files)
+    return files
+
+
+class TestPlanning:
+    def test_execution_never_crosses_partitions(self):
+        _, t, _ = make_table()
+        add_files(t, 10)
+        tasks = comp.plan_table(t, target_bytes=64 * MB)
+        for task in tasks:
+            parts = {f.partition for f in task.inputs}
+            assert len(parts) == 1
+
+    def test_well_sized_files_not_replanned(self):
+        _, t, _ = make_table()
+        add_files(t, 6, size=600 * MB)
+        assert comp.plan_table(t, target_bytes=512 * MB) == []
+
+
+class TestExecution:
+    def test_atomic_table_scope_single_commit(self):
+        _, t, _ = make_table()
+        add_files(t, 12)
+        v0 = t.version
+        tasks = comp.plan_table(t, target_bytes=64 * MB)
+        res = comp.execute_tasks_atomic(t, tasks)
+        assert res.success
+        assert t.version == v0 + 1          # exactly one commit
+        assert t.file_count() == len({f.partition
+                                      for f in t.current_files()})
+
+    def test_interleaved_write_conflicts_then_retries(self):
+        _, t, _ = make_table("table")
+        add_files(t, 12)
+        injected = {"n": 0}
+
+        def interleave(table, task):
+            # two concurrent appends -> stale-metadata threshold crossed
+            for j in range(2):
+                path = f"{table.table_id}/data/x{injected['n']}-{j}.bin"
+                table.store.put(path, b"y")
+                table.append([DataFile(path, MB, 1, "a")])
+            injected["n"] += 1
+
+        tasks = comp.plan_table(t, target_bytes=64 * MB)
+        res = comp.execute_tasks_atomic(t, tasks, interleave_fn=interleave)
+        assert res.success
+        assert res.conflict and res.retries >= 1   # conflicted, then recovered
+
+    def test_failure_injection_reported_not_raised(self):
+        _, t, _ = make_table()
+        add_files(t, 8)
+        tasks = comp.plan_table(t, target_bytes=64 * MB)
+        res = comp.execute_task(t, tasks[0], fail_fn=lambda task: True)
+        assert not res.success
+        assert res.error == "injected_failure"
+        # table unchanged
+        assert t.file_count() == 8
+
+    def test_partition_scope_commits_per_partition(self):
+        _, t, _ = make_table("partition")
+        add_files(t, 12)
+        v0 = t.version
+        tasks = comp.plan_table(t, target_bytes=64 * MB, scope="partition")
+        for task in tasks:
+            assert comp.execute_task(t, task).success
+        assert t.version - v0 == len(tasks)   # one commit per task
+
+    def test_compaction_then_expiry_frees_objects(self):
+        _, t, store = make_table()
+        add_files(t, 12)
+        for task in comp.plan_table(t, target_bytes=64 * MB):
+            assert comp.execute_task(t, task).success
+        freed = t.expire_snapshots(keep_last=1)
+        assert freed > 0

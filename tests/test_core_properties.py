@@ -1,0 +1,161 @@
+"""Property-based tests (hypothesis) on AutoComp's decision invariants."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.decide import (MoopRanker, minmax_normalize,
+                               quota_adaptive_weights, select_budget,
+                               select_topk)
+from repro.core.model import Candidate, CandidateStats, Scope
+from repro.core.orient import (ComputeCostTrait, FileCountReductionTrait,
+                               FileEntropyTrait, TraitContext)
+from repro.lst import InMemoryStore
+from repro.lst.files import DataFile
+from repro.lst.table import LogStructuredTable
+
+MB = 1 << 20
+
+
+def mk_candidate(sizes, table_id="ns/t", partition=None):
+    store = InMemoryStore()
+    t = LogStructuredTable(store, table_id)
+    files = []
+    for i, s in enumerate(sizes):
+        path = f"{table_id}/data/f{i}.bin"
+        store.put(path, b"x")
+        files.append(DataFile(path, int(s), 1, partition))
+    t.append(files)
+    c = Candidate(t, Scope.TABLE)
+    from repro.core.observe import StatsCollector
+    StatsCollector(512 * MB).observe(c)
+    return c
+
+
+sizes_strategy = st.lists(st.integers(min_value=1, max_value=2 << 30),
+                          min_size=1, max_size=40)
+
+
+class TestTraits:
+    @given(sizes_strategy)
+    @settings(max_examples=25, deadline=None)
+    def test_file_count_reduction_formula(self, sizes):
+        """Paper §4.2: ΔF_c counts files below the target size."""
+        c = mk_candidate(sizes)
+        ctx = TraitContext(target_file_bytes=512 * MB)
+        v = FileCountReductionTrait().compute(c, ctx)
+        assert v == sum(1 for s in sizes if s < 512 * MB)
+
+    @given(sizes_strategy)
+    @settings(max_examples=25, deadline=None)
+    def test_entropy_nonnegative(self, sizes):
+        c = mk_candidate(sizes)
+        ctx = TraitContext(target_file_bytes=512 * MB)
+        assert FileEntropyTrait().compute(c, ctx) >= 0.0
+
+    def test_entropy_drops_after_packing(self):
+        """Many small files have higher excess entropy than the same bytes
+        packed at target size."""
+        ctx = TraitContext(target_file_bytes=512 * MB)
+        frag = mk_candidate([4 * MB] * 256)
+        packed = mk_candidate([512 * MB] * 2)
+        e = FileEntropyTrait()
+        assert e.compute(frag, ctx) > e.compute(packed, ctx)
+
+    @given(sizes_strategy, st.floats(min_value=1.0, max_value=64.0))
+    @settings(max_examples=25, deadline=None)
+    def test_gbhr_linear_in_bytes(self, sizes, mem_gb):
+        """GBHr = mem * small_bytes / rate, exactly (§4.2)."""
+        c = mk_candidate(sizes)
+        ctx = TraitContext(target_file_bytes=512 * MB,
+                           executor_memory_gb=mem_gb,
+                           rewrite_bytes_per_hour=1e9)
+        v = ComputeCostTrait().compute(c, ctx)
+        small = sum(s for s in sizes if s < 512 * MB)
+        assert v == pytest.approx(mem_gb * small / 1e9)
+
+
+class TestRanking:
+    def _cands(self, vals):
+        out = []
+        for i, (b, c) in enumerate(vals):
+            cand = mk_candidate([MB], table_id=f"ns/t{i:03d}")
+            cand.traits = {"file_count_reduction": float(b),
+                           "compute_cost": float(c)}
+            out.append(cand)
+        return out
+
+    @given(st.lists(st.tuples(st.floats(0, 1e6), st.floats(0, 1e6)),
+                    min_size=1, max_size=30))
+    @settings(max_examples=30, deadline=None)
+    def test_minmax_in_unit_interval(self, vals):
+        cands = self._cands(vals)
+        minmax_normalize(cands, ["file_count_reduction", "compute_cost"])
+        for c in cands:
+            for v in c.normalized.values():
+                assert 0.0 <= v <= 1.0
+
+    @given(st.lists(st.tuples(st.floats(0, 1e6), st.floats(0, 1e6)),
+                    min_size=2, max_size=20), st.randoms())
+    @settings(max_examples=20, deadline=None)
+    def test_rank_deterministic_and_permutation_invariant(self, vals, rnd):
+        """NFR2: identical inputs -> identical decisions, regardless of
+        candidate enumeration order."""
+        ranker = MoopRanker({"file_count_reduction": 0.7,
+                             "compute_cost": 0.3})
+        a = ranker.rank(self._cands(vals))
+        shuffled = self._cands(vals)
+        rnd.shuffle(shuffled)
+        b = ranker.rank(shuffled)
+        assert [c.key for c in a] == [c.key for c in b]
+
+    def test_weights_must_sum_to_one(self):
+        with pytest.raises(ValueError):
+            MoopRanker({"file_count_reduction": 0.7, "compute_cost": 0.7})
+
+    @given(st.lists(st.tuples(st.floats(0, 100), st.floats(0.01, 10)),
+                    min_size=1, max_size=30),
+           st.floats(min_value=0.0, max_value=20.0))
+    @settings(max_examples=30, deadline=None)
+    def test_budget_never_exceeded(self, vals, budget):
+        ranker = MoopRanker({"file_count_reduction": 0.7,
+                             "compute_cost": 0.3})
+        ranked = ranker.rank(self._cands(vals))
+        sel = select_budget(ranked, budget)
+        assert sum(c.traits["compute_cost"] for c in sel) <= budget + 1e-9
+
+    def test_higher_benefit_same_cost_ranks_first(self):
+        """Paper §4.2: 200-file reduction beats 100 at equal cost."""
+        cands = self._cands([(100, 5), (200, 5)])
+        ranker = MoopRanker({"file_count_reduction": 0.7,
+                             "compute_cost": 0.3})
+        ranked = ranker.rank(cands)
+        assert ranked[0].traits["file_count_reduction"] == 200
+
+    @given(st.floats(min_value=0, max_value=1))
+    @settings(max_examples=30, deadline=None)
+    def test_quota_adaptive_weights(self, util):
+        w = quota_adaptive_weights(util * 100, 100)
+        assert w["file_count_reduction"] == pytest.approx(
+            min(1.0, 0.5 * (1 + util)))
+        assert sum(w.values()) == pytest.approx(1.0)
+
+
+class TestBinpack:
+    @given(st.lists(st.integers(min_value=1, max_value=600 * MB),
+                    min_size=0, max_size=60))
+    @settings(max_examples=30, deadline=None)
+    def test_bins_respect_target(self, sizes):
+        from repro.lst.compaction import plan_binpack
+        files = [DataFile(f"f{i}", s, 1) for i, s in enumerate(sizes)]
+        tasks = plan_binpack(files, 512 * MB)
+        for t in tasks:
+            assert t.input_bytes <= 512 * MB
+            assert len(t.inputs) >= 2
+            for f in t.inputs:
+                assert f.size_bytes < 512 * MB
+        # no file appears in two bins
+        seen = [f.path for t in tasks for f in t.inputs]
+        assert len(seen) == len(set(seen))

@@ -1,0 +1,111 @@
+"""Data layer: shard round-trips (hypothesis), packing, pipeline
+determinism, and the central invariant — compaction NEVER changes the token
+multiset the training job reads."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (DataPipeline, TokenShardWriter, decode_shard,
+                        encode_shard, merge_shards_fn, pack_tokens)
+from repro.data.shards import decode_shard_padded
+from repro.kernels.compact_pack.compact_pack import CHUNK_TOKENS
+from repro.lst import Catalog, InMemoryStore
+from repro.lst import compaction as comp
+from repro.lst.workload import SimClock
+
+
+def make_table(seed=0):
+    clock = SimClock()
+    store = InMemoryStore()
+    cat = Catalog(store, now_fn=clock.now)
+    t = cat.create_table("train", "corpus",
+                         properties={"conflict_granularity": "table"})
+    t.now_fn = clock.now
+    return cat, t, store
+
+
+class TestShardFormat:
+    @given(st.integers(min_value=0, max_value=5000))
+    @settings(max_examples=30, deadline=None)
+    def test_encode_decode_roundtrip(self, n):
+        rng = np.random.RandomState(1)
+        toks = rng.randint(0, 1 << 20, size=n).astype(np.int32)
+        raw = encode_shard(toks)
+        out = decode_shard(raw)
+        assert np.array_equal(out, toks)
+        padded = decode_shard_padded(raw)
+        assert padded.shape[0] % CHUNK_TOKENS == 0
+        assert padded.shape[0] >= n
+
+    def test_pack_tokens_shapes_and_labels(self):
+        stream = np.arange(4 * 3 * 9 + 5, dtype=np.int32)
+        slabs = pack_tokens(stream, batch=3, seq_len=8)
+        assert slabs.shape == (4, 3, 9)
+        # labels are next-token shifted views of the same stream
+        assert np.array_equal(slabs[0, 0, 1:], stream[1:9])
+
+
+class TestCompactionPreservesData:
+    @pytest.mark.parametrize("tokens_per_file", [100, 1024, 3000])
+    def test_token_multiset_preserved(self, tokens_per_file):
+        _, table, _ = make_table()
+        w = TokenShardWriter(table, vocab=997, seed=3)
+        for _ in range(5):
+            w.trickle_append(n_files=8, tokens_per_file=tokens_per_file)
+        pipe = DataPipeline(table, batch=2, seq_len=64)
+        before = np.sort(np.concatenate(
+            [b["tokens"].ravel() for b in pipe.batches()]))
+        for t in comp.plan_table(table, target_bytes=1 << 20):
+            r = comp.execute_task(table, t, merge_fn=merge_shards_fn)
+            assert r.success, r.error
+        assert table.file_count() < 40
+        pipe2 = DataPipeline(table, batch=2, seq_len=64)
+        after = np.sort(np.concatenate(
+            [b["tokens"].ravel() for b in pipe2.batches()]))
+        assert np.array_equal(before, after)
+
+    def test_num_rows_preserved_exactly(self):
+        _, table, _ = make_table()
+        w = TokenShardWriter(table, vocab=100, seed=4)
+        w.trickle_append(n_files=6, tokens_per_file=777)
+        rows_before = sum(f.num_rows for f in table.current_files())
+        for t in comp.plan_table(table, target_bytes=1 << 22):
+            assert comp.execute_task(table, t, merge_fn=merge_shards_fn).success
+        rows_after = sum(f.num_rows for f in table.current_files())
+        assert rows_before == rows_after
+
+
+class TestPipeline:
+    def test_batches_deterministic_by_seed(self):
+        _, table, _ = make_table()
+        w = TokenShardWriter(table, vocab=500, seed=5)
+        w.trickle_append(n_files=10, tokens_per_file=2000)
+        a = [b["tokens"] for b in DataPipeline(table, 2, 64, seed=1).batches()]
+        b = [b["tokens"] for b in DataPipeline(table, 2, 64, seed=1).batches()]
+        assert all(np.array_equal(x, y) for x, y in zip(a, b))
+
+    def test_prefetch_yields_same_batches(self):
+        _, table, _ = make_table()
+        w = TokenShardWriter(table, vocab=500, seed=6)
+        w.trickle_append(n_files=6, tokens_per_file=2000)
+        plain = [b["tokens"] for b in DataPipeline(table, 2, 64, seed=2).batches()]
+        pre = [b["tokens"] for b in
+               DataPipeline(table, 2, 64, seed=2).prefetching_batches()]
+        assert len(plain) == len(pre)
+        assert all(np.array_equal(x, y) for x, y in zip(plain, pre))
+
+    def test_plan_cost_scales_with_file_count(self):
+        _, table, store = make_table()
+        w = TokenShardWriter(table, vocab=100, seed=7)
+        w.trickle_append(n_files=50, tokens_per_file=200)
+        pipe = DataPipeline(table, 2, 16)
+        open_before = store.metrics.open_calls
+        list(pipe.batches())
+        opens_fragmented = store.metrics.open_calls - open_before
+        for t in comp.plan_table(table, target_bytes=1 << 22):
+            comp.execute_task(table, t, merge_fn=merge_shards_fn)
+        open_before = store.metrics.open_calls
+        list(DataPipeline(table, 2, 16).batches())
+        opens_compacted = store.metrics.open_calls - open_before
+        assert opens_compacted < opens_fragmented

@@ -1,0 +1,124 @@
+"""Per-kernel allclose sweeps: shapes x dtypes vs the pure-jnp oracles,
+all in interpret mode on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, dtype, k=0):
+    x = jax.random.normal(jax.random.fold_in(KEY, k), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def max_err(a, b):
+    return float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+
+
+class TestCompactPack:
+    @pytest.mark.parametrize("counts,order", [
+        ([1], None),
+        ([3, 1, 2], [2, 0, 1]),
+        ([8, 8, 8, 8], [3, 2, 1, 0]),
+        ([5, 1, 7, 2, 9], [4, 0, 3, 1, 2]),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+    def test_matches_oracle(self, counts, order, dtype):
+        from repro.kernels.compact_pack import compact_chunks, plan_compaction
+        from repro.kernels.compact_pack.compact_pack import CHUNK_TOKENS
+        cm = plan_compaction(counts, order)
+        n = sum(counts) * CHUNK_TOKENS
+        src = (jnp.arange(n) % 971).astype(dtype)
+        out_k = compact_chunks(src, cm)
+        out_r = compact_chunks(src, cm, use_ref=True)
+        assert (out_k == out_r).all()
+
+    def test_plan_is_permutation(self):
+        from repro.kernels.compact_pack import plan_compaction
+        cm = plan_compaction([4, 2, 6], [2, 1, 0])
+        assert sorted(cm.tolist()) == list(range(12))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,hkv,s,d", [
+        (1, 4, 4, 128, 64),     # MHA
+        (2, 4, 2, 256, 64),     # GQA
+        (1, 8, 1, 128, 32),     # MQA
+        (1, 4, 2, 256, 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    def test_causal_matches_oracle(self, b, h, hkv, s, d, dtype):
+        from repro.kernels.flash_attn import flash_attention
+        from repro.kernels.flash_attn.ref import flash_attention_ref
+        q = rand((b, h, s, d), dtype, 1)
+        k = rand((b, hkv, s, d), dtype, 2)
+        v = rand((b, hkv, s, d), dtype, 3)
+        out = flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+        ref = flash_attention_ref(q, k, v, causal=True)
+        tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+        assert max_err(out, ref) < tol
+
+    @pytest.mark.parametrize("window", [32, 128])
+    def test_sliding_window(self, window):
+        from repro.kernels.flash_attn import flash_attention
+        from repro.kernels.flash_attn.ref import flash_attention_ref
+        q = rand((1, 2, 256, 64), jnp.bfloat16, 4)
+        k = rand((1, 2, 256, 64), jnp.bfloat16, 5)
+        v = rand((1, 2, 256, 64), jnp.bfloat16, 6)
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              block_q=128, block_k=128)
+        ref = flash_attention_ref(q, k, v, causal=True, window=window)
+        assert max_err(out, ref) < 5e-2
+
+    def test_non_causal(self):
+        from repro.kernels.flash_attn import flash_attention
+        from repro.kernels.flash_attn.ref import flash_attention_ref
+        q = rand((1, 2, 128, 64), jnp.bfloat16, 7)
+        k = rand((1, 2, 128, 64), jnp.bfloat16, 8)
+        v = rand((1, 2, 128, 64), jnp.bfloat16, 9)
+        out = flash_attention(q, k, v, causal=False, block_q=128, block_k=128)
+        ref = flash_attention_ref(q, k, v, causal=False)
+        assert max_err(out, ref) < 5e-2
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,h,hkv,s,d", [
+        (2, 4, 2, 512, 64),
+        (4, 8, 8, 256, 64),
+        (1, 8, 2, 1024, 128),
+    ])
+    def test_matches_oracle_ragged_lengths(self, b, h, hkv, s, d):
+        from repro.kernels.decode_attn import decode_attention
+        from repro.kernels.decode_attn.ref import decode_attention_ref
+        q = rand((b, h, d), jnp.bfloat16, 10)
+        k = rand((b, s, hkv, d), jnp.bfloat16, 11)
+        v = rand((b, s, hkv, d), jnp.bfloat16, 12)
+        lens = jnp.asarray(
+            np.random.RandomState(0).randint(1, s + 1, size=b), jnp.int32)
+        out = decode_attention(q, k, v, lens, block_k=128)
+        ref = decode_attention_ref(q, k, v, lens)
+        assert max_err(out, ref) < 5e-2
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("r,d", [(256, 128), (1024, 512), (128, 1024)])
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    def test_matches_oracle(self, r, d, dtype):
+        from repro.kernels.rmsnorm import rmsnorm
+        from repro.kernels.rmsnorm.ref import rmsnorm_ref
+        x = rand((r, d), dtype, 13)
+        sc = rand((d,), dtype, 14)
+        out = rmsnorm(x, sc, block_rows=128)
+        ref = rmsnorm_ref(x, sc)
+        tol = 1e-1 if dtype == jnp.bfloat16 else 1e-5
+        assert max_err(out, ref) < tol
+
+    def test_matches_model_rms_norm(self):
+        from repro.kernels.rmsnorm import rmsnorm
+        from repro.models.common import rms_norm
+        x = rand((64, 64), jnp.bfloat16, 15)
+        sc = rand((64,), jnp.bfloat16, 16)
+        assert max_err(rmsnorm(x, sc), rms_norm(x, sc)) < 1e-1

@@ -1,0 +1,173 @@
+"""Fault tolerance: checkpoint round-trips (incl. bf16), preemption
+recovery with loss continuity, straggler detection, elastic restore,
+checkpoint-bundle compaction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ModelConfig
+from repro.lst import Catalog, InMemoryStore
+from repro.lst import compaction as comp
+from repro.lst.workload import SimClock
+from repro.models import transformer
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+from repro.train.checkpoints import CheckpointManager, bundle_merge_fn
+from repro.train.runner import (RunnerConfig, SimulatedPreemption, Trainer)
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                   n_heads=4, n_kv_heads=2, d_ff=64, vocab=128, head_dim=8,
+                   tie_embeddings=True)
+
+
+def make_setup(steps=30, seed=0):
+    cfg = TINY
+    params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = opt_lib.init_state(params)
+    step_fn = jax.jit(step_lib.make_train_step(
+        cfg, opt_lib.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=steps)))
+    rng = np.random.RandomState(seed)
+    data = rng.randint(0, cfg.vocab, size=(64, 4, 33)).astype(np.int32)
+
+    def batches():
+        for slab in data:
+            yield {"tokens": slab[:, :-1], "labels": slab[:, 1:]}
+
+    return cfg, params, opt, step_fn, batches
+
+
+class TestCheckpoints:
+    def test_roundtrip_bf16_and_scalars(self):
+        store = InMemoryStore()
+        mgr = CheckpointManager(store)
+        tree = {"w": jnp.ones((4, 4), jnp.bfloat16) * 1.5,
+                "mu": jnp.arange(8, dtype=jnp.float32),
+                "step": 7}
+        mgr.save(3, tree)
+        restored, step = mgr.restore(tree)
+        assert step == 3
+        assert restored["w"].dtype == jnp.bfloat16
+        assert jnp.allclose(restored["w"].astype(jnp.float32), 1.5)
+        assert jnp.array_equal(restored["mu"], tree["mu"])
+        assert int(restored["step"]) == 7
+
+    def test_async_save_visible_after_wait(self):
+        store = InMemoryStore()
+        mgr = CheckpointManager(store)
+        mgr.save(1, {"a": jnp.zeros(3)}, blocking=False)
+        mgr.wait()
+        assert mgr.available_steps() == [1]
+
+    def test_gc_keeps_last(self):
+        store = InMemoryStore()
+        mgr = CheckpointManager(store, keep_last=2)
+        for s in range(5):
+            mgr.save(s, {"a": jnp.zeros(3)})
+        assert mgr.available_steps() == [3, 4]
+
+    def test_manifest_is_atomic_publish(self):
+        """No MANIFEST -> checkpoint invisible (crash mid-save is safe)."""
+        store = InMemoryStore()
+        mgr = CheckpointManager(store)
+        mgr.save(1, {"a": jnp.zeros(3)})
+        store.delete("ckpt/step-00000001/MANIFEST.json")
+        assert mgr.available_steps() == []
+        with pytest.raises(FileNotFoundError):
+            mgr.restore({"a": jnp.zeros(3)})
+
+    def test_bundle_compaction_of_checkpoint_objects(self):
+        """AutoComp can bundle many small checkpoint leaves (storage healing
+        for the checkpoint table)."""
+        clock = SimClock()
+        store = InMemoryStore()
+        cat = Catalog(store, now_fn=clock.now)
+        table = cat.create_table("ckpt", "registry")
+        table.now_fn = clock.now
+        mgr = CheckpointManager(store, keep_last=10, table=table)
+        mgr.save(1, {"a": jnp.zeros(64), "b": jnp.ones((8, 8))})
+        n_before = table.file_count()
+        tasks = comp.plan_table(table, target_bytes=1 << 20)
+        assert tasks
+        for t in tasks:
+            r = comp.execute_task(table, t, merge_fn=bundle_merge_fn)
+            assert r.success
+        assert table.file_count() < n_before
+
+
+class TestRecovery:
+    def test_preemption_restart_continues_from_checkpoint(self):
+        cfg, params, opt, step_fn, batches = make_setup()
+        store = InMemoryStore()
+        mgr = CheckpointManager(store, keep_last=3)
+        fired = {"done": False}
+
+        def fault(step):
+            if step == 17 and not fired["done"]:
+                fired["done"] = True
+                raise SimulatedPreemption()
+
+        tr = Trainer(RunnerConfig(total_steps=25, ckpt_every=5),
+                     step_fn, params, opt, batches, ckpt=mgr,
+                     fault_hook=fault)
+        out = tr.run_with_recovery()
+        assert tr.restarts == 1
+        assert out["final_step"] == 25
+        steps_seen = [h["step"] for h in out["history"]]
+        assert 15 in steps_seen and steps_seen.count(16) >= 1
+        # recovery resumed from step 15 (last ckpt), not from 0
+        post = [s for s in steps_seen if steps_seen.count(s) > 1]
+        assert 0 not in post
+
+    def test_recovery_without_checkpoint_restarts_from_zero(self):
+        cfg, params, opt, step_fn, batches = make_setup()
+        fired = {"done": False}
+
+        def fault(step):
+            if step == 3 and not fired["done"]:
+                fired["done"] = True
+                raise SimulatedPreemption()
+
+        tr = Trainer(RunnerConfig(total_steps=6, ckpt_every=100),
+                     step_fn, params, opt, batches, ckpt=None,
+                     fault_hook=fault)
+        out = tr.run_with_recovery()
+        assert out["final_step"] == 6
+
+    def test_elastic_restore_into_new_batch_layout(self):
+        """Save under one dp layout, restore and continue under another
+        (different microbatching) — params/opt are layout-agnostic."""
+        cfg, params, opt, step_fn, batches = make_setup()
+        store = InMemoryStore()
+        mgr = CheckpointManager(store)
+        tr = Trainer(RunnerConfig(total_steps=10, ckpt_every=5),
+                     step_fn, params, opt, batches, ckpt=mgr)
+        tr.run()
+        # "rescaled" job: microbatches=2 now
+        step_fn2 = jax.jit(step_lib.make_train_step(
+            cfg, opt_lib.AdamWConfig(), microbatches=2))
+        (p2, o2, s2), step = mgr.restore((params, opt, 0))
+        tr2 = Trainer(RunnerConfig(total_steps=12, ckpt_every=100),
+                      step_fn2, p2, o2, batches)
+        tr2.step = int(np.asarray(s2))
+        out = tr2.run()
+        assert out["final_step"] == 12
+
+
+class TestStragglers:
+    def test_straggler_detected_and_hook_fires(self):
+        cfg, params, opt, step_fn, batches = make_setup()
+        seen = []
+
+        def inject(step, dt):
+            return 0.5 if step == 20 else 0.0     # +500ms at step 20
+
+        tr = Trainer(RunnerConfig(total_steps=24, straggler_window=8,
+                                  straggler_factor=3.0),
+                     step_fn, params, opt, batches,
+                     straggler_hook=inject,
+                     on_straggler=lambda s, dt, med: seen.append(s))
+        tr.run()
+        assert 20 in tr.stragglers_detected
+        assert seen == tr.stragglers_detected
