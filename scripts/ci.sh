@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 gate: install dev deps and run the full suite. A collection error
+# anywhere (e.g. a module importing a package that does not exist) fails
+# this script, so seed-style breakage can never land again.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -r requirements-dev.txt
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

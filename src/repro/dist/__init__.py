@@ -1,0 +1,19 @@
+"""Distribution layer: logical-axis sharding rules and compressed collectives.
+
+``repro.dist.sharding`` maps *logical* axis names (declared on every
+parameter ``Spec`` and every activation ``constrain`` call in
+``repro.models``) onto *mesh* axes, with divisibility fallback so one rule
+set serves every architecture and mesh shape. ``repro.dist.collectives``
+provides blockwise-int8 compressed reductions with error feedback for
+cross-pod gradient traffic.
+"""
+
+from repro.dist import collectives, sharding  # noqa: F401
+from repro.dist.sharding import (  # noqa: F401
+    PRESETS,
+    axis_rules,
+    constrain,
+    mesh_axis_size,
+    resolve_spec,
+    tree_shardings,
+)

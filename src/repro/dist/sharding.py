@@ -1,0 +1,175 @@
+"""Logical-axis-rule sharding (flax ``logical_axis_rules`` style, no flax).
+
+Model code never names mesh axes. Parameters declare logical axes via
+``Spec`` and activations pass them to :func:`constrain`; a *rule set* maps
+each logical name to an ordered tuple of candidate mesh axes. Resolution is
+mesh-aware:
+
+- a candidate mesh axis that is absent from the mesh is skipped (the same
+  ``baseline`` rules drive the local ``(data, model)`` mesh and the
+  production ``(pod, data, model)`` mesh);
+- a dimension that is not divisible by a candidate axis size stays
+  unsharded on that axis (yi-34b's 56 heads on model=16 fall back to
+  replicated rather than erroring);
+- each mesh axis is used at most once per array (PartitionSpec invariant).
+
+:func:`constrain` is a no-op outside an :func:`axis_rules` context so model
+code runs unmodified in single-device tests, and lowers to
+``with_sharding_constraint`` inside one.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# A rule maps one logical axis name to an ordered tuple of candidate mesh
+# axes; a dimension takes every candidate (in order) that is present in the
+# mesh, unused by this array, and divides the remaining dimension size.
+Rules = Tuple[Tuple[str, Tuple[str, ...]], ...]
+
+_WEIGHT_RULES: Rules = (
+    ("embed", ("data",)),            # FSDP/ZeRO: weights sharded over data
+    ("mlp", ("model",)),
+    ("expert_mlp", ("model",)),
+    ("experts", ("model",)),
+    ("heads", ("model",)),
+    ("kv_heads", ("model",)),
+    ("vocab", ("model",)),
+    ("ssm_inner", ("model",)),
+    ("kv_lora", ("model",)),
+    ("q_lora", ("model",)),
+)
+
+BASE_RULES: Rules = (("batch", ("pod", "data")),) + _WEIGHT_RULES
+
+# Named rule presets consumed by ``repro.launch.dryrun --preset``.
+PRESETS: Dict[str, Rules] = {
+    # data-parallel batch + FSDP weights + tensor-parallel contractions
+    "baseline": BASE_RULES,
+    # Megatron sequence parallelism: the residual-stream anchor
+    # ("seq_res") additionally shards saved activations over model
+    "sp": BASE_RULES + (("seq_res", ("model",)),),
+    # pure data parallelism (weights replicated) — roofline control arm
+    "ddp": (("batch", ("pod", "data", "model")),),
+}
+
+DEFAULT_RULES = PRESETS["baseline"]
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    """name -> size for ``jax.sharding.Mesh`` and ``AbstractMesh`` alike."""
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def _rule_map(rules: Optional[Rules]) -> Dict[str, Tuple[str, ...]]:
+    out: Dict[str, Tuple[str, ...]] = {}
+    for name, targets in (DEFAULT_RULES if rules is None else rules):
+        if targets is None:
+            out[name] = ()
+        elif isinstance(targets, str):
+            out[name] = (targets,)
+        else:
+            out[name] = tuple(targets)
+    return out
+
+
+def resolve_spec(shape: Sequence[int],
+                 logical_axes: Sequence[Optional[str]],
+                 mesh, rules: Optional[Rules] = None) -> P:
+    """Resolve one array's logical axes to a ``PartitionSpec`` on ``mesh``."""
+    if len(shape) != len(logical_axes):
+        raise ValueError(f"rank mismatch: shape {tuple(shape)} vs "
+                         f"logical axes {tuple(logical_axes)}")
+    rmap = _rule_map(rules)
+    sizes = _axis_sizes(mesh)
+    used: set = set()
+    entries: list = []
+    for dim, name in zip(shape, logical_axes):
+        targets = rmap.get(name, ()) if name is not None else ()
+        chosen: list = []
+        prod = 1
+        for t in targets:
+            if t not in sizes or t in used:
+                continue
+            if dim % (prod * sizes[t]) == 0:
+                chosen.append(t)
+                prod *= sizes[t]
+        used.update(chosen)
+        if not chosen:
+            entries.append(None)
+        elif len(chosen) == 1:
+            entries.append(chosen[0])
+        else:
+            entries.append(tuple(chosen))
+    while entries and entries[-1] is None:   # P(a, None) != P(a) in jax
+        entries.pop()
+    return P(*entries)
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of mesh axis ``name`` in the active context (1 outside one)."""
+    active = _current()
+    if active is None:
+        return 1
+    mesh, _ = active
+    return _axis_sizes(mesh).get(name, 1)
+
+
+def tree_shardings(abs_tree: Any, axes_tree: Any, mesh,
+                   rules: Optional[Rules] = None) -> Any:
+    """Pytree of ``NamedSharding`` matching a pytree of abstract leaves.
+
+    ``axes_tree`` mirrors ``abs_tree`` with a tuple of logical names at each
+    leaf position (tuples are NOT traversed into — ``tree.map`` flattens up
+    to ``abs_tree``'s leaves).
+    """
+    return jax.tree.map(
+        lambda leaf, axes: NamedSharding(
+            mesh, resolve_spec(leaf.shape, tuple(axes), mesh, rules)),
+        abs_tree, axes_tree)
+
+
+# ---------------------------------------------------------------------------
+# context: activate (mesh, rules) for constrain() / mesh_axis_size()
+# ---------------------------------------------------------------------------
+
+class _Stack(threading.local):
+    def __init__(self):
+        self.items: list = []
+
+
+_ctx = _Stack()
+
+
+def _current():
+    return _ctx.items[-1] if _ctx.items else None
+
+
+class axis_rules:
+    """``with axis_rules(mesh, rules): ...`` — re-entrant and reusable."""
+
+    def __init__(self, mesh, rules: Optional[Rules] = None):
+        self.mesh = mesh
+        self.rules = DEFAULT_RULES if rules is None else rules
+
+    def __enter__(self) -> "axis_rules":
+        _ctx.items.append((self.mesh, self.rules))
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        _ctx.items.pop()
+        return False
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    """Annotate ``x`` with the resolved sharding; identity out of context."""
+    active = _current()
+    if active is None:
+        return x
+    mesh, rules = active
+    spec = resolve_spec(x.shape, logical_axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

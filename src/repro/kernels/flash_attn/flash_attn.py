@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 DEFAULT_BLOCK_Q = 512
 DEFAULT_BLOCK_K = 512
@@ -109,7 +111,7 @@ def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pltpu.VMEM((bq, 128), jnp.float32),   # l
             pltpu.VMEM((bq, d), jnp.float32),     # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -11,13 +11,10 @@ fine-grained work units — and failure injection for fault-tolerance tests.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.lst.files import DataFile
 from repro.lst.table import CommitConflict, LogStructuredTable
-
-_task_ids = itertools.count(1)
 
 
 @dataclasses.dataclass
@@ -63,10 +60,13 @@ def plan_binpack(files: Sequence[DataFile], target_bytes: int,
         else:
             bins.append([f])
             sizes.append(f.size_bytes)
+    # Task IDs are scoped to the plan (1..N, bin order) — NFR2 determinism:
+    # two plans over the same catalog state yield identical IDs, with no
+    # module-global counter leaking state across tables or test runs.
     tasks = []
     for b, s in zip(bins, sizes):
         if len(b) >= min_input_files:
-            tasks.append(CompactionTask(next(_task_ids), "", scope,
+            tasks.append(CompactionTask(len(tasks) + 1, "", scope,
                                         tuple(b), s))
     return tasks
 
@@ -89,6 +89,7 @@ def plan_table(table: LogStructuredTable, target_bytes: int,
         for t in plan_binpack(files, target_bytes, min_input_files,
                               part or None):
             t.table_id = table.table_id
+            t.task_id = len(tasks) + 1   # plan-scoped: unique across partitions
             tasks.append(t)
     return tasks
 
@@ -105,6 +106,15 @@ def default_merge_fn(table: LogStructuredTable, task: CompactionTask,
         partition=task.scope, created_at=table.now_fn())
 
 
+def _delete_orphans(table: LogStructuredTable,
+                    written: Sequence[DataFile]) -> None:
+    """Remove output blobs of a rewrite that never committed."""
+    live = {f.path for f in table.current_files()}
+    for f in written:
+        if f.path not in live and table.store.exists(f.path):
+            table.store.delete(f.path)
+
+
 def execute_tasks_atomic(table: LogStructuredTable,
                          tasks: Sequence[CompactionTask],
                          merge_fn: Callable = default_merge_fn,
@@ -118,7 +128,7 @@ def execute_tasks_atomic(table: LogStructuredTable,
     the whole rewrite — this is why the paper's table-scope runs hit
     cluster-side conflicts that partition-scope (per-partition commits)
     avoids."""
-    agg = CompactionTask(next(_task_ids), table.table_id, None,
+    agg = CompactionTask(0, table.table_id, None,
                          tuple(f for t in tasks for f in t.inputs),
                          sum(t.est_output_bytes for t in tasks))
     res = CompactionResult(task=agg, success=False)
@@ -129,17 +139,26 @@ def execute_tasks_atomic(table: LogStructuredTable,
     new_files = []
     for t in tasks:
         ext = t.inputs[0].path.rsplit(".", 1)[-1] if t.inputs else "bin"
-        out_path = f"{table.table_id}/data/compacted-{t.task_id}.{ext}"
+        # deterministic per catalog state (NFR2), unique across cycles:
+        # the snapshot basis version advances with every commit
+        out_path = (f"{table.table_id}/data/"
+                    f"compacted-{txn.base_version}-{t.task_id}.{ext}")
         try:
             new_files.append(merge_fn(table, t, out_path))
         except FileNotFoundError as e:
             res.error = f"missing input: {e}"
+            _delete_orphans(table, new_files)
             return res
         if interleave_fn is not None:
             interleave_fn(table, t)
     for attempt in range(max_retries + 1):
         inputs_alive = {f.path for f in table.current_files()}
         live_inputs = [f for f in agg.inputs if f.path in inputs_alive]
+        if attempt > 0 and len(live_inputs) < 2:
+            # same guard as execute_task: a conflict that killed the inputs
+            # must not resurrect their rows via the merged outputs
+            res.error = "inputs no longer live after conflict"
+            break
         try:
             txn.rewrite_files(live_inputs, new_files, scope=None)
             txn.commit()
@@ -150,7 +169,6 @@ def execute_tasks_atomic(table: LogStructuredTable,
             res.retries = attempt + 1
             txn = table.new_transaction()
     if res.success:
-        live = {f.path for f in agg.inputs}
         for f in agg.inputs:
             if table.store.exists(f.path):
                 table.store.delete(f.path)
@@ -161,6 +179,13 @@ def execute_tasks_atomic(table: LogStructuredTable,
         res.bytes_rewritten = sum(f.size_bytes for f in agg.inputs)
         res.gbhr = executor_memory_gb * (res.bytes_rewritten
                                          / rewrite_bytes_per_hour)
+    else:
+        # a compaction system must not create small-file garbage: drop the
+        # already-written outputs of an uncommitted rewrite
+        _delete_orphans(table, new_files)
+        if res.error is None:
+            res.error = (f"retries exhausted after {res.retries} "
+                         f"conflicting commit attempts")
     return res
 
 
@@ -184,14 +209,17 @@ def execute_task(table: LogStructuredTable, task: CompactionTask,
     if fail_fn is not None and fail_fn(task):
         res.error = "injected_failure"
         return res
-    sid = f"{task.task_id}"
     ext = task.inputs[0].path.rsplit(".", 1)[-1] if task.inputs else "bin"
-    out_path = f"{table.table_id}/data/compacted-{sid}.{ext}"
     txn = table.new_transaction()       # plan-time snapshot basis
+    # deterministic per catalog state (NFR2), unique across cycles: the
+    # snapshot basis version advances with every commit
+    out_path = (f"{table.table_id}/data/"
+                f"compacted-{txn.base_version}-{task.task_id}.{ext}")
     try:
         new_file = merge_fn(table, task, out_path)
     except FileNotFoundError as e:
         res.error = f"missing input: {e}"
+        _delete_orphans(table, [DataFile(out_path, 0, 0, task.scope)])
         return res
     if interleave_fn is not None:
         interleave_fn(table, task)      # concurrent user work mid-rewrite
@@ -222,4 +250,12 @@ def execute_task(table: LogStructuredTable, task: CompactionTask,
         # paper §4.2: GBHr_c = ExecutorMemoryGB * DataSize_c / RewriteBytesPerHour
         res.gbhr = executor_memory_gb * (res.bytes_rewritten
                                          / rewrite_bytes_per_hour)
+    else:
+        # aborted rewrite (conflict-dead inputs or exhausted retries): the
+        # merged blob never entered table metadata — delete it, a compaction
+        # system must not create small-file garbage
+        _delete_orphans(table, [new_file])
+        if res.error is None:
+            res.error = (f"retries exhausted after {res.retries} "
+                         f"conflicting commit attempts")
     return res

@@ -1,0 +1,157 @@
+"""NFR2 (determinism) + garbage-hygiene regressions for the compaction
+executor: plan IDs and output paths must be identical across runs on the
+same catalog state, and aborted rewrites must not leave orphaned
+``compacted-*`` blobs in the store."""
+
+from repro.lst import Catalog, InMemoryStore
+from repro.lst import compaction as comp
+from repro.lst.files import DataFile
+from repro.lst.workload import SimClock
+
+MB = 1 << 20
+
+
+def make_table(granularity="table", n_files=10, parts=("a", "b")):
+    clock = SimClock()
+    store = InMemoryStore()
+    cat = Catalog(store, now_fn=clock.now)
+    t = cat.create_table("ns", "t", "p",
+                         properties={"conflict_granularity": granularity})
+    t.now_fn = clock.now
+    files = []
+    for i in range(n_files):
+        path = f"{t.table_id}/data/f{i}.bin"
+        t.store.put(path, b"x" * 128)
+        files.append(DataFile(path, 4 * MB, 10, parts[i % len(parts)]))
+    t.append(files)
+    return t, store
+
+
+def plan_fingerprint(tasks):
+    return [(t.task_id, t.scope, tuple(f.path for f in t.inputs))
+            for t in tasks]
+
+
+class TestPlanDeterminism:
+    def test_plan_table_identical_across_runs(self):
+        t1, _ = make_table()
+        t2, _ = make_table()
+        a = comp.plan_table(t1, target_bytes=64 * MB)
+        b = comp.plan_table(t2, target_bytes=64 * MB)
+        assert plan_fingerprint(a) == plan_fingerprint(b)
+
+    def test_replanning_same_state_identical(self):
+        t, _ = make_table()
+        a = comp.plan_table(t, target_bytes=64 * MB)
+        b = comp.plan_table(t, target_bytes=64 * MB)
+        assert plan_fingerprint(a) == plan_fingerprint(b)
+
+    def test_task_ids_plan_scoped_not_global(self):
+        """No module-global counter: every plan starts at task_id 1 and IDs
+        are unique within the plan (across partitions)."""
+        t, _ = make_table()
+        for _ in range(2):
+            tasks = comp.plan_table(t, target_bytes=64 * MB)
+            ids = [task.task_id for task in tasks]
+            assert ids == list(range(1, len(ids) + 1))
+
+    def test_execute_paths_identical_across_runs(self):
+        t1, _ = make_table()
+        t2, _ = make_table()
+        for t in (t1, t2):
+            for task in comp.plan_table(t, target_bytes=64 * MB):
+                assert comp.execute_task(t, task).success
+        paths1 = sorted(f.path for f in t1.current_files())
+        paths2 = sorted(f.path for f in t2.current_files())
+        assert paths1 == paths2
+
+    def test_successive_cycles_do_not_collide(self):
+        """Output names embed the snapshot basis version, so a later cycle
+        never reuses (and overwrites) the name of an earlier cycle's live
+        output — the hazard of plan-scoped IDs alone."""
+        t, store = make_table(n_files=8)
+        for task in comp.plan_table(t, target_bytes=64 * MB):
+            assert comp.execute_task(t, task).success
+        cycle1 = {f.path: store.get(f.path) for f in t.current_files()
+                  if "compacted-" in f.path}
+        assert cycle1
+        # append more small files and compact again
+        extra = []
+        for i in range(8):
+            path = f"{t.table_id}/data/g{i}.bin"
+            store.put(path, b"y" * 128)
+            extra.append(DataFile(path, 4 * MB, 10, ("a", "b")[i % 2]))
+        t.append(extra)
+        for task in comp.plan_table(t, target_bytes=64 * MB):
+            assert comp.execute_task(t, task).success
+        live = {f.path for f in t.current_files()}
+        for p in live:                          # nothing dangling
+            assert store.exists(p)
+        for p, blob in cycle1.items():          # survivors bit-identical
+            if p in live:
+                assert store.get(p) == blob
+
+
+class TestFailureHygiene:
+    def interleave_two_appends(self, table, task):
+        n = getattr(self, "_n", 0)
+        for j in range(2):   # cross the stale-metadata threshold
+            path = f"{table.table_id}/data/x{n}-{j}.bin"
+            table.store.put(path, b"y")
+            table.append([DataFile(path, MB, 1, "a")])
+        self._n = n + 1
+
+    def test_exhausted_retries_sets_error_and_deletes_output(self):
+        t, store = make_table("table")
+        tasks = comp.plan_table(t, target_bytes=64 * MB)
+        res = comp.execute_task(t, tasks[0], max_retries=0,
+                                interleave_fn=self.interleave_two_appends)
+        assert not res.success and res.conflict
+        assert res.error and "exhausted" in res.error
+        # the merged blob never committed -> it must not survive in the store
+        assert store.list(f"{t.table_id}/data/compacted-") == []
+        for f in t.current_files():   # untouched inputs still present
+            assert store.exists(f.path)
+
+    def test_dead_inputs_abort_deletes_output(self):
+        t, store = make_table("table")
+        tasks = comp.plan_table(t, target_bytes=64 * MB)
+
+        def delete_inputs(table, _task):
+            table.delete_files(list(_task.inputs))
+
+        res = comp.execute_task(t, tasks[0], interleave_fn=delete_inputs)
+        assert not res.success
+        assert res.error == "inputs no longer live after conflict"
+        assert store.list(f"{t.table_id}/data/compacted-") == []
+
+    def test_atomic_dead_inputs_do_not_resurrect_rows(self):
+        """A concurrent delete of the inputs mid-rewrite must abort the
+        atomic commit — not land compacted copies of the deleted rows."""
+        t, store = make_table("table")
+        tasks = comp.plan_table(t, target_bytes=64 * MB)
+
+        def delete_all_inputs(table, _task):
+            live = [f for f in table.current_files()
+                    if "compacted-" not in f.path]
+            if live:
+                table.delete_files(live)
+
+        res = comp.execute_tasks_atomic(t, tasks,
+                                        interleave_fn=delete_all_inputs)
+        assert not res.success
+        assert res.error == "inputs no longer live after conflict"
+        assert t.current_files() == ()      # the delete stands
+        assert store.list(f"{t.table_id}/data/compacted-") == []
+
+    def test_atomic_failure_deletes_all_outputs(self):
+        t, store = make_table("table")
+        tasks = comp.plan_table(t, target_bytes=64 * MB)
+        res = comp.execute_tasks_atomic(
+            t, tasks, max_retries=0,
+            interleave_fn=self.interleave_two_appends)
+        assert not res.success
+        assert res.error and "exhausted" in res.error
+        assert store.list(f"{t.table_id}/data/compacted-") == []
+        for f in t.current_files():   # original files untouched
+            assert store.exists(f.path)

@@ -1,0 +1,37 @@
+"""Import-sweep regression: every module under ``src/repro`` must import.
+
+The seed shipped with ``repro.models``/``repro.launch`` importing a
+``repro.dist`` package that did not exist, so 5 of 11 test modules died at
+collection. This sweep turns any future missing-package (or version-skew
+AttributeError at import time) into one focused failure.
+"""
+
+import importlib
+import pkgutil
+
+import repro
+
+
+def _iter_module_names():
+    yield "repro"
+    for m in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+        yield m.name
+
+
+def test_every_repro_module_imports():
+    failed = {}
+    for name in sorted(_iter_module_names()):
+        try:
+            importlib.import_module(name)
+        except Exception as e:  # noqa: BLE001 — collect them all, report once
+            failed[name] = repr(e)
+    assert not failed, f"modules failed to import: {failed}"
+
+
+def test_dist_public_surface():
+    from repro import dist
+
+    for attr in ("resolve_spec", "axis_rules", "constrain", "tree_shardings",
+                 "mesh_axis_size", "PRESETS"):
+        assert hasattr(dist, attr), attr
+    assert "baseline" in dist.PRESETS
