@@ -21,7 +21,10 @@ def _time_us(fn, *args, iters=3) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main() -> List[str]:
+def main(quick: bool = False) -> List[str]:
+    """``quick=True`` is the CI smoke mode: every workload shrinks so the
+    whole suite exercises each kernel path in seconds — timings are then
+    smoke numbers, not calibration data."""
     rows = []
     key = jax.random.PRNGKey(0)
 
@@ -29,7 +32,7 @@ def main() -> List[str]:
     # interpret mode is not meaningful for throughput; oracle == same math)
     from repro.kernels.compact_pack import compact_chunks, plan_compaction
     from repro.kernels.compact_pack.compact_pack import CHUNK_TOKENS
-    n_chunks = 2048
+    n_chunks = 256 if quick else 2048
     src = jax.random.randint(key, (n_chunks * CHUNK_TOKENS,), 0, 1 << 30,
                              dtype=jnp.int32)
     cm = plan_compaction([64] * (n_chunks // 64),
@@ -44,42 +47,49 @@ def main() -> List[str]:
 
     # flash attention: kernel-vs-ref correctness scale + host us
     from repro.kernels.flash_attn import flash_attention
-    q = jax.random.normal(key, (1, 4, 512, 64), jnp.float32).astype(jnp.bfloat16)
-    k = jax.random.normal(key, (1, 2, 512, 64), jnp.float32).astype(jnp.bfloat16)
-    v = jax.random.normal(key, (1, 2, 512, 64), jnp.float32).astype(jnp.bfloat16)
+    seq = 128 if quick else 512
+    q = jax.random.normal(key, (1, 4, seq, 64), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(key, (1, 2, seq, 64), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(key, (1, 2, seq, 64), jnp.float32).astype(jnp.bfloat16)
     us_ref = _time_us(lambda a, b, c: flash_attention(a, b, c, use_ref=True),
                       q, k, v)
     us_k = _time_us(lambda a, b, c: flash_attention(a, b, c, block_q=128,
                                                     block_k=128), q, k, v)
-    rows.append(f"kernel_flash_attn_ref,{us_ref:.0f},B1H4S512D64")
-    rows.append(f"kernel_flash_attn_interpret,{us_k:.0f},B1H4S512D64")
+    rows.append(f"kernel_flash_attn_ref,{us_ref:.0f},B1H4S{seq}D64")
+    rows.append(f"kernel_flash_attn_interpret,{us_k:.0f},B1H4S{seq}D64")
 
     # decode attention
     from repro.kernels.decode_attn import decode_attention
+    clen = 512 if quick else 2048
     qd = jax.random.normal(key, (4, 8, 64), jnp.float32).astype(jnp.bfloat16)
-    kc = jax.random.normal(key, (4, 2048, 2, 64), jnp.float32).astype(jnp.bfloat16)
-    vc = jax.random.normal(key, (4, 2048, 2, 64), jnp.float32).astype(jnp.bfloat16)
-    lens = jnp.array([2048, 1024, 512, 100], jnp.int32)
+    kc = jax.random.normal(key, (4, clen, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    vc = jax.random.normal(key, (4, clen, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    lens = jnp.array([clen, clen // 2, clen // 4, 100], jnp.int32)
     us_ref = _time_us(lambda a, b, c, l: decode_attention(a, b, c, l,
                                                           use_ref=True),
                       qd, kc, vc, lens)
     us_k = _time_us(lambda a, b, c, l: decode_attention(a, b, c, l,
                                                         block_k=512),
                     qd, kc, vc, lens)
-    rows.append(f"kernel_decode_attn_ref,{us_ref:.0f},B4S2048")
-    rows.append(f"kernel_decode_attn_interpret,{us_k:.0f},B4S2048")
+    rows.append(f"kernel_decode_attn_ref,{us_ref:.0f},B4S{clen}")
+    rows.append(f"kernel_decode_attn_interpret,{us_k:.0f},B4S{clen}")
 
     # rmsnorm
     from repro.kernels.rmsnorm import rmsnorm
-    x = jax.random.normal(key, (4096, 1024), jnp.float32).astype(jnp.bfloat16)
+    rows_n = 512 if quick else 4096
+    x = jax.random.normal(key, (rows_n, 1024), jnp.float32).astype(jnp.bfloat16)
     sc = jnp.ones((1024,), jnp.bfloat16)
     us_ref = _time_us(lambda a, b: rmsnorm(a, b, use_ref=True), x, sc)
     us_k = _time_us(lambda a, b: rmsnorm(a, b), x, sc)
-    rows.append(f"kernel_rmsnorm_ref,{us_ref:.0f},R4096D1024")
-    rows.append(f"kernel_rmsnorm_interpret,{us_k:.0f},R4096D1024")
+    rows.append(f"kernel_rmsnorm_ref,{us_ref:.0f},R{rows_n}D1024")
+    rows.append(f"kernel_rmsnorm_interpret,{us_k:.0f},R{rows_n}D1024")
     return rows
 
 
 if __name__ == "__main__":
-    for r in main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: tiny shapes, seconds not minutes")
+    for r in main(quick=ap.parse_args().quick):
         print(r)

@@ -1,13 +1,18 @@
 """§Roofline table emitter: reads the dry-run JSON records (experiments/
 dryrun/) and prints one row per (arch x shape x mesh) cell with the three
-terms, the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPS."""
+terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and — for train
+cells — the int8-vs-bf16 gradient-transport collective comparison.
+
+``--json PATH`` additionally writes the full record set as a trajectory
+artifact (the CI bench-smoke job uploads it as ``BENCH_roofline.json``) so
+regressions can later be diffed across commits."""
 
 from __future__ import annotations
 
 import glob
 import json
 import os
-from typing import List
+from typing import List, Optional
 
 
 def load(outdir: str = "experiments/dryrun"):
@@ -18,11 +23,15 @@ def load(outdir: str = "experiments/dryrun"):
     return recs
 
 
-def main() -> List[str]:
+def main(outdir: str = "experiments/dryrun") -> List[str]:
     rows = []
     ok = skip = 0
-    for r in load():
+    for r in load(outdir):
         tag = f"{r['arch']};{r['shape']};{r['mesh']}"
+        variant = [v for v in (r.get("preset"), r.get("grad_transport"))
+                   if v and v not in ("baseline", "bf16")]
+        if variant:
+            tag += ";" + "-".join(variant)
         if r.get("status") == "skip":
             skip += 1
             rows.append(f"roofline[{tag}],skip,{r['skip_reason']}")
@@ -32,16 +41,37 @@ def main() -> List[str]:
             continue
         ok += 1
         rf = r["roofline"]
+        coll_cmp = ""
+        if rf.get("collective_s_int8") is not None \
+                and r.get("kind") == "train":
+            coll_cmp = (f";coll_bf16={rf['collective_s_bf16']:.4f}"
+                        f";coll_int8={rf['collective_s_int8']:.4f}")
         rows.append(
             f"roofline[{tag}],{rf['roofline_fraction']:.4f},"
             f"dom={rf['dominant'].replace('_s','')};"
             f"compute={rf['compute_s']:.4f};mem={rf['memory_s']:.4f};"
             f"coll={rf['collective_s']:.4f};"
-            f"useful_ratio={rf['useful_flops_ratio']:.3f}")
+            f"useful_ratio={rf['useful_flops_ratio']:.3f}" + coll_cmp)
     rows.append(f"roofline_cells,{ok},skips={skip}")
     return rows
 
 
+def write_trajectory(path: str, outdir: str = "experiments/dryrun") -> None:
+    """Dump rows + raw records as one JSON artifact for CI upload/diffing."""
+    recs = load(outdir)
+    payload = {"cells": len(recs), "rows": main(outdir), "records": recs}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the trajectory artifact JSON here")
+    args = ap.parse_args()
     for r in main():
         print(r)
+    if args.json:
+        write_trajectory(args.json)
+        print(f"wrote {args.json}")

@@ -2,9 +2,15 @@
 # Tier-1 gate: install dev deps and run the full suite. A collection error
 # anywhere (e.g. a module importing a package that does not exist) fails
 # this script, so seed-style breakage can never land again.
+#
+# SKIP_INSTALL=1 skips the pip step — the CI jobs set it after the shared
+# install step so the suite isn't preceded by a redundant re-install on
+# every invocation.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-python -m pip install -r requirements-dev.txt
+if [[ "${SKIP_INSTALL:-0}" != "1" ]]; then
+    python -m pip install -r requirements-dev.txt
+fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

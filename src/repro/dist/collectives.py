@@ -30,22 +30,73 @@ def quantize_int8(x: jnp.ndarray, block: int = 256
     ``scales: float32 (n_blocks,)``.
     """
     flat = jnp.ravel(x).astype(jnp.float32)
-    n = flat.shape[0]
-    pad = (-n) % block
+    pad = (-flat.shape[0]) % block
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
-    blocks = flat.reshape(-1, block)
-    scales = jnp.max(jnp.abs(blocks), axis=1) / 127.0
-    safe = jnp.where(scales > 0, scales, 1.0)   # all-zero block -> q = 0
-    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
-    return q, scales
+    return _quantize_blocks(flat.reshape(-1, block))
 
 
 def dequantize_int8(q: jnp.ndarray, scales: jnp.ndarray, n: int
                     ) -> jnp.ndarray:
     """Inverse of :func:`quantize_int8`; returns the first ``n`` elements."""
-    out = q.astype(jnp.float32) * scales[:, None]
-    return out.reshape(-1)[:n]
+    return _dequantize_blocks(q, scales).reshape(-1)[:n]
+
+
+def _quantize_blocks(blocks: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 over the trailing ``block`` axis of ``(..., block)``."""
+    scales = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    safe = jnp.where(scales > 0, scales, 1.0)   # all-zero block -> q = 0
+    q = jnp.clip(jnp.round(blocks / safe[..., None]), -127, 127).astype(jnp.int8)
+    return q, scales
+
+
+def _dequantize_blocks(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scales[..., None]
+
+
+def _two_stage_int8_psum(flat: jnp.ndarray, axis_name, block: int
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All-reduce ``flat`` across ``axis_name`` moving int8 on the wire.
+
+    DRAGONN-style two-stage scheme (the op mix a real int8 all-reduce uses):
+
+    1. split the payload into one chunk per peer, quantize each chunk
+       blockwise, and ``all_to_all`` the int8 chunks + f32 scales — every
+       device receives each peer's compressed contribution to *its* chunk;
+    2. dequantize + sum locally (the owned chunk is now fully reduced),
+       re-quantize it, and ``all_gather`` the int8 result chunks.
+
+    Wire traffic is ~(2 + 8/block) bytes/element vs 4 bytes/element for a
+    ring bf16 all-reduce. Both quantization errors feed the returned
+    residual: stage 1 over the full local payload, stage 2 only on the
+    owned chunk (each chunk has exactly one owner, so the residual *sum*
+    across devices captures the stage-2 error exactly once).
+
+    Returns ``(summed_flat, residual_flat)`` of the same length as ``flat``.
+    """
+    w = jax.lax.psum(1, axis_name)   # statically-known axis size
+    n = flat.shape[0]
+    pad = (-n) % (w * block)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    npad = flat.shape[0]
+    chunk = npad // w
+    # stage 1: my contribution to every peer's chunk, int8 on the wire
+    q1, s1 = _quantize_blocks(flat.reshape(w, chunk // block, block))
+    err1 = flat - _dequantize_blocks(q1, s1).reshape(npad)
+    q1x = jax.lax.all_to_all(q1, axis_name, split_axis=0, concat_axis=0)
+    s1x = jax.lax.all_to_all(s1, axis_name, split_axis=0, concat_axis=0)
+    mine = jnp.sum(_dequantize_blocks(q1x, s1x), axis=0)   # (chunk//block, block)
+    # stage 2: broadcast the reduced chunk, int8 on the wire again
+    q2, s2 = _quantize_blocks(mine)
+    err2 = (mine - _dequantize_blocks(q2, s2)).reshape(chunk)
+    q2g = jax.lax.all_gather(q2, axis_name)
+    s2g = jax.lax.all_gather(s2, axis_name)
+    out = _dequantize_blocks(q2g, s2g).reshape(npad)
+    ofs = jax.lax.axis_index(axis_name) * chunk
+    new_err = jax.lax.dynamic_update_slice(
+        err1, jax.lax.dynamic_slice(err1, (ofs,), (chunk,)) + err2, (ofs,))
+    return out[:n], new_err[:n]
 
 
 def compressed_psum(x: jnp.ndarray, axis_name: Optional[str] = None,
@@ -59,14 +110,20 @@ def compressed_psum(x: jnp.ndarray, axis_name: Optional[str] = None,
     the accumulated sum over steps converges to the uncompressed sum.
 
     ``axis_name=None`` degenerates to the single-device identity (no psum) —
-    the form the local-mesh tests and the CPU container exercise.
+    the form the SPMD train step and the CPU container exercise: the
+    quantization error and residual carry are real, only the wire is not.
+    With an ``axis_name`` (inside ``shard_map``/``pmap``) the reduction runs
+    the two-stage int8 exchange, so the compiled HLO moves int8 — this is
+    the path the forced-8-device tests compile and measure.
 
     Returns ``(summed, new_err)``.
     """
     xf = x.astype(jnp.float32)
     carry = xf if err is None else xf + err.astype(jnp.float32)
-    q, scales = quantize_int8(carry, block)
-    deq = dequantize_int8(q, scales, carry.size).reshape(carry.shape)
-    new_err = carry - deq
-    out = deq if axis_name is None else jax.lax.psum(deq, axis_name)
-    return out.astype(x.dtype), new_err
+    if axis_name is None:
+        q, scales = quantize_int8(carry, block)
+        deq = dequantize_int8(q, scales, carry.size).reshape(carry.shape)
+        return deq.astype(x.dtype), carry - deq
+    out, new_err = _two_stage_int8_psum(jnp.ravel(carry), axis_name, block)
+    return (out.reshape(carry.shape).astype(x.dtype),
+            new_err.reshape(carry.shape))

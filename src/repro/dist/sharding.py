@@ -46,6 +46,22 @@ _WEIGHT_RULES: Rules = (
 
 BASE_RULES: Rules = (("batch", ("pod", "data")),) + _WEIGHT_RULES
 
+# Expert parallelism for the MoE configs: experts distribute over the data
+# axis (each device holds whole experts — the classic EP layout; dispatch
+# becomes an all-to-all over data) while the expert hidden dim keeps tensor
+# parallelism over model. Baseline instead puts experts on the model axis,
+# which starves the expert_mlp contraction of its axis.
+_EP_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
+    (name, ("data",)) if name == "experts" else (name, targets)
+    for name, targets in _WEIGHT_RULES)
+
+# Pod-level FSDP: ZeRO weight shards span the pod axis too, so parameters
+# and optimizer moments divide across the DCI before the data axis — 2x less
+# state per chip on the 2x16x16 mesh at the cost of cross-pod all-gathers.
+_FSDP_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
+    (name, ("pod", "data")) if name == "embed" else (name, targets)
+    for name, targets in _WEIGHT_RULES)
+
 # Named rule presets consumed by ``repro.launch.dryrun --preset``.
 PRESETS: Dict[str, Rules] = {
     # data-parallel batch + FSDP weights + tensor-parallel contractions
@@ -55,6 +71,10 @@ PRESETS: Dict[str, Rules] = {
     "sp": BASE_RULES + (("seq_res", ("model",)),),
     # pure data parallelism (weights replicated) — roofline control arm
     "ddp": (("batch", ("pod", "data", "model")),),
+    # expert parallelism over data + tensor parallelism inside experts
+    "ep": _EP_RULES,
+    # pod-level FSDP: weight/moment shards cross the pod boundary
+    "fsdp": _FSDP_RULES,
 }
 
 DEFAULT_RULES = PRESETS["baseline"]

@@ -137,7 +137,9 @@ def model_flops(cfg, shape) -> float:
 COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                   "collective-permute")
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# iota form "replica_groups=[2,4]<=[8]" and list form "replica_groups={{0,2},..."
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
 # computation header: "%name (args...) -> type {" — args may contain nested
 # parens (tuple-typed params), so only anchor on the leading name.
 _COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
@@ -186,12 +188,43 @@ def _split_computations(text: str) -> Dict[str, List[str]]:
     return comps
 
 
-def _collective_line_bytes(s: str) -> Optional[Tuple[str, int, int]]:
-    """(op, bytes, bf16-equivalent bytes).
+def _group_size(s: str) -> int:
+    """Replica-group size of a collective line; 0 when unparseable."""
+    m = _GROUPS_IOTA_RE.search(s)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(s)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip()])
+    return 0
 
-    The CPU backend promotes bf16 dots to f32, so weight/activation
-    collectives appear at 2x their TPU size; the bf16-equivalent number
-    halves f32 collective payloads (TPU keeps them bf16).
+
+def _wire_bytes(op: str, full_bytes: float, g: int) -> float:
+    """Per-device link traffic under the standard ring algorithms.
+
+    ``full_bytes`` is the logical full-array payload (the result shape for
+    all ops except reduce-scatter, whose result is 1/g of it). Ring
+    all-reduce moves 2(g-1)/g of the array (reduce-scatter + all-gather
+    phases); all-gather / reduce-scatter / all-to-all move (g-1)/g; a
+    permute moves the array once. Unknown group size assumes a large group.
+    """
+    frac = (g - 1) / g if g > 1 else (1.0 if g == 0 else 0.0)
+    if op == "all-reduce":
+        return 2.0 * frac * full_bytes
+    if op == "collective-permute":
+        return float(full_bytes)
+    return frac * full_bytes
+
+
+def _collective_line_bytes(s: str
+                           ) -> Optional[Tuple[str, int, int, int, int]]:
+    """(op, bytes, bf16-equivalent bytes, wire bytes, bf16-eq wire bytes).
+
+    ``bytes`` is the result-shape payload (legacy metric); ``wire_bytes``
+    models what actually crosses the links (see :func:`_wire_bytes`). The
+    CPU backend promotes bf16 dots to f32, so weight/activation collectives
+    appear at 2x their TPU size; the bf16-equivalent numbers halve f32
+    collective payloads (TPU keeps them bf16).
     """
     for op in COLLECTIVE_OPS:
         idx = s.find(op + "(")
@@ -207,12 +240,14 @@ def _collective_line_bytes(s: str) -> Optional[Tuple[str, int, int]]:
             b = _shape_bytes(m.group(1), m.group(2))
             byts += b
             byts_eq += b * (0.5 if m.group(1) == "f32" else 1.0)
+        g = _group_size(s)
         if op == "reduce-scatter":
-            g = _GROUPS_RE.search(s)
-            mul = int(g.group(2)) if g else 1
+            mul = g if g else 1
             byts *= mul
             byts_eq *= mul
-        return op, byts, int(byts_eq)
+        wire = _wire_bytes(op, byts, g)
+        wire_eq = _wire_bytes(op, byts_eq, g)
+        return op, byts, int(byts_eq), int(wire), int(wire_eq)
     return None
 
 
@@ -235,10 +270,11 @@ def hlo_collective_bytes(text: str) -> Dict[str, Any]:
         entry = "__entry__"
 
     memo: Dict[str, Dict[str, Any]] = {}
+    _KEYS = ("count", "bytes", "bytes_bf16eq", "wire_bytes",
+             "wire_bytes_bf16eq")
 
     def zero():
-        return {op: {"count": 0, "bytes": 0, "bytes_bf16eq": 0}
-                for op in COLLECTIVE_OPS}
+        return {op: {k: 0 for k in _KEYS} for op in COLLECTIVE_OPS}
 
     def visit(name: str, stack=()) -> Dict[str, Any]:
         if name in memo:
@@ -249,17 +285,19 @@ def hlo_collective_bytes(text: str) -> Dict[str, Any]:
         for s in comps[name]:
             hit = _collective_line_bytes(s)
             if hit:
-                op, byts, byts_eq = hit
+                op, byts, byts_eq, wire, wire_eq = hit
                 agg[op]["count"] += 1
                 agg[op]["bytes"] += byts
                 agg[op]["bytes_bf16eq"] += byts_eq
+                agg[op]["wire_bytes"] += wire
+                agg[op]["wire_bytes_bf16eq"] += wire_eq
             wm = _WHILE_RE.search(s)
             if wm:
                 cond, body = wm.group(1), wm.group(2)
                 trips = _cond_trip_count(comps.get(cond, []))
                 sub = visit(body, stack + (name,))
                 for op in COLLECTIVE_OPS:
-                    for k in ("count", "bytes", "bytes_bf16eq"):
+                    for k in _KEYS:
                         agg[op][k] += sub[op][k] * trips
                 continue
             for cm in _CALL_RE.finditer(s):
@@ -268,16 +306,15 @@ def hlo_collective_bytes(text: str) -> Dict[str, Any]:
                         continue
                     sub = visit(callee, stack + (name,))
                     for op in COLLECTIVE_OPS:
-                        for k in ("count", "bytes", "bytes_bf16eq"):
+                        for k in _KEYS:
                             agg[op][k] += sub[op][k]
         memo[name] = agg
         return agg
 
     agg = visit(entry)
-    agg["total_bytes"] = sum(v["bytes"] for v in agg.values()
-                             if isinstance(v, dict))
-    agg["total_bytes_bf16eq"] = sum(v["bytes_bf16eq"] for v in agg.values()
-                                    if isinstance(v, dict))
+    for k in ("bytes", "bytes_bf16eq", "wire_bytes", "wire_bytes_bf16eq"):
+        agg["total_" + k] = sum(v[k] for v in agg.values()
+                                if isinstance(v, dict))
     return agg
 
 
@@ -297,7 +334,7 @@ def top_collectives(text: str, n: int = 20):
         for s in comps[name]:
             hit = _collective_line_bytes(s)
             if hit:
-                op, byts, _ = hit
+                op, byts = hit[0], hit[1]
                 shape = s.split(" = ")[1].split(" ")[0][:70]
                 c, b = tally.get((op, shape), (0, 0))
                 tally[(op, shape)] = (c + mult, b + byts * mult)

@@ -85,11 +85,18 @@ def _cost_analysis(compiled) -> Dict[str, float]:
 model_flops = analysis.model_flops
 
 
+# Wire ratio of the two-stage int8 exchange vs a ring bf16 all-reduce for
+# the same payload: (1 int8 byte + f32 scale per block) on each of the two
+# stages, against 2 bf16 bytes on each of the two ring phases.
+INT8_EF_WIRE_RATIO = (1 + 4 / 256) / 2
+
+
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                skip_compile: bool = False, preset: str = "baseline",
                microbatches: Optional[int] = None,
                remat_block: Optional[int] = None,
-               capacity_factor: Optional[float] = None) -> Dict[str, Any]:
+               capacity_factor: Optional[float] = None,
+               grad_transport: str = "bf16") -> Dict[str, Any]:
     import dataclasses as _dc
     cfg = get_config(arch)
     if remat_block is not None:
@@ -104,6 +111,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "kind": shape.kind, "preset": preset,
+        "grad_transport": grad_transport if shape.kind == "train" else None,
         "microbatches": shape.microbatches,
         "remat_block": cfg.remat_block,
         "capacity_factor": cfg.capacity_factor,
@@ -127,12 +135,14 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     b_shard = {k: NamedSharding(mesh, shd.resolve_spec(
         batch_sds[k].shape, b_axes[k], mesh, rules)) for k in batch_sds}
 
-    fn, kind = step_lib.step_for_shape(cfg, shape)
+    fn, kind = step_lib.step_for_shape(cfg, shape,
+                                       grad_transport=grad_transport)
     ctx = shd.axis_rules(mesh, rules)
     t0 = time.time()
     if kind == "train":
-        o_abs = opt_lib.abstract_state(p_abs)
-        o_axes = opt_lib.state_axes(p_axes)
+        ef = grad_transport == "int8_ef"
+        o_abs = opt_lib.abstract_state(p_abs, error_feedback=ef)
+        o_axes = opt_lib.state_axes(p_axes, error_feedback=ef)
         o_shard = shd.tree_shardings(o_abs, o_axes, mesh, rules)
         jfn = jax.jit(fn, in_shardings=(p_shard, o_shard, b_shard),
                       out_shardings=(p_shard, o_shard, None))
@@ -176,19 +186,31 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     flops_dev = jc["flops"] / n_chips          # analytic, trip-count exact
     bytes_dev = jc["hbm_bytes"] / n_chips      # dot-operand HBM traffic model
-    # per-device, loop-aware, adjusted for the CPU backend's bf16->f32 dot
-    # promotion (TPU keeps these payloads bf16); raw bytes kept in the record
-    coll_dev = float(coll["total_bytes_bf16eq"])
+    # per-device link traffic (ring wire model), loop-aware, adjusted for the
+    # CPU backend's bf16->f32 dot promotion (TPU keeps these payloads bf16);
+    # raw result-shape bytes stay in the record under coll["total_bytes"]
+    coll_dev = float(coll["total_wire_bytes_bf16eq"])
+    # int8-vs-bf16 gradient-transport comparison: the gradient reduction is
+    # the all-reduce/reduce-scatter wire component; the int8_ef transport
+    # moves INT8_EF_WIRE_RATIO of its bf16 bytes (validated on a real
+    # 8-device mesh in tests/test_multidevice.py), everything else (weight
+    # all-gathers, MoE all-to-alls) is unchanged.
+    grad_wire = float(coll["all-reduce"]["wire_bytes_bf16eq"]
+                      + coll["reduce-scatter"]["wire_bytes_bf16eq"])
+    coll_dev_int8 = coll_dev - grad_wire * (1 - INT8_EF_WIRE_RATIO)
     mf = model_flops(cfg, shape)
     terms = {
         "compute_s": flops_dev / PEAK_FLOPS,
         "memory_s": bytes_dev / HBM_BW,
-        "collective_s": coll_dev / ICI_BW,
+        "collective_s": (coll_dev_int8 if grad_transport == "int8_ef"
+                         and shape.kind == "train" else coll_dev) / ICI_BW,
     }
     dom = max(terms, key=terms.get)
     bound_s = terms[dom]
     rec["roofline"] = {
         **terms,
+        "collective_s_bf16": coll_dev / ICI_BW,
+        "collective_s_int8": coll_dev_int8 / ICI_BW,
         "dominant": dom,
         "model_flops": mf,
         "model_flops_per_device": mf / n_chips,
@@ -210,7 +232,13 @@ def main() -> None:
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--lower-only", action="store_true")
     ap.add_argument("--preset", default="baseline",
-                    choices=sorted(shd.PRESETS))
+                    help="comma-separated preset names or 'all' "
+                         f"(known: {','.join(sorted(shd.PRESETS))})")
+    ap.add_argument("--grad-transport", default="bf16",
+                    choices=["bf16", "int8_ef", "both"],
+                    help="gradient transport for train cells; 'both' sweeps "
+                         "the two and the records carry the collective_s "
+                         "int8-vs-bf16 comparison either way")
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--remat-block", type=int, default=None)
     ap.add_argument("--capacity-factor", type=float, default=None)
@@ -220,12 +248,37 @@ def main() -> None:
     shapes = list(shapes_lib.SHAPE_IDS) if args.shape == "all" \
         else args.shape.split(",")
     meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    presets = sorted(shd.PRESETS) if args.preset == "all" \
+        else args.preset.split(",")
+    for p in presets:
+        if p not in shd.PRESETS:
+            ap.error(f"unknown preset {p!r}; known: {sorted(shd.PRESETS)}")
+    transports = ["bf16", "int8_ef"] if args.grad_transport == "both" \
+        else [args.grad_transport]
     os.makedirs(args.out, exist_ok=True)
 
     failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                for preset in presets:
+                    for transport in transports:
+                        failures += run_one(
+                            args, arch, shape, mp, preset, transport)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+def run_one(args, arch: str, shape: str, mp: bool, preset: str,
+            transport: str) -> int:
+    is_train = shapes_lib.SHAPES[shape].kind == "train"
+    if transport == "int8_ef" and not is_train:
+        return 0                       # transport only exists for train cells
     parts = []
-    if args.preset != "baseline":
-        parts.append(args.preset)
+    if preset != "baseline":
+        parts.append(preset)
+    if transport != "bf16":
+        parts.append(transport)
     if args.microbatches:
         parts.append(f"mb{args.microbatches}")
     if args.remat_block:
@@ -233,46 +286,48 @@ def main() -> None:
     if args.capacity_factor:
         parts.append(f"cf{args.capacity_factor}")
     variant = ("__" + "-".join(parts)) if parts else ""
-    for arch in archs:
-        for shape in shapes:
-            for mp in meshes:
-                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}" \
-                    + variant
-                path = os.path.join(args.out, tag + ".json")
-                if os.path.exists(path) and not args.force:
-                    print(f"[cached] {tag}")
-                    continue
-                print(f"[dryrun] {tag} ...", flush=True)
-                try:
-                    rec = lower_cell(arch, shape, mp,
-                                     skip_compile=args.lower_only,
-                                     preset=args.preset,
-                                     microbatches=args.microbatches,
-                                     remat_block=args.remat_block,
-                                     capacity_factor=args.capacity_factor)
-                except Exception as e:  # a failure here is a bug in the system
-                    rec = {"arch": arch, "shape": shape,
-                           "mesh": "2x16x16" if mp else "16x16",
-                           "status": "error", "error": repr(e),
-                           "traceback": traceback.format_exc()[-4000:]}
-                    failures += 1
-                with open(path, "w") as f:
-                    json.dump(rec, f, indent=1)
-                status = rec.get("status")
-                if status == "ok":
-                    r = rec["roofline"]
-                    print(f"  ok: compile={rec['compile_s']}s "
-                          f"dom={r['dominant']} "
-                          f"compute={r['compute_s']:.4f}s "
-                          f"mem={r['memory_s']:.4f}s "
-                          f"coll={r['collective_s']:.4f}s "
-                          f"frac={r['roofline_fraction'] and round(r['roofline_fraction'], 3)}",
-                          flush=True)
-                else:
-                    print(f"  {status}: {rec.get('skip_reason') or rec.get('error', '')[:200]}",
-                          flush=True)
-    print(f"done; failures={failures}")
-    raise SystemExit(1 if failures else 0)
+    tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}" + variant
+    path = os.path.join(args.out, tag + ".json")
+    if os.path.exists(path) and not args.force:
+        print(f"[cached] {tag}")
+        return 0
+    print(f"[dryrun] {tag} ...", flush=True)
+    failed = 0
+    try:
+        rec = lower_cell(arch, shape, mp,
+                         skip_compile=args.lower_only,
+                         preset=preset,
+                         microbatches=args.microbatches,
+                         remat_block=args.remat_block,
+                         capacity_factor=args.capacity_factor,
+                         grad_transport=transport)
+    except Exception as e:  # a failure here is a bug in the system
+        rec = {"arch": arch, "shape": shape,
+               "mesh": "2x16x16" if mp else "16x16",
+               "status": "error", "error": repr(e),
+               "traceback": traceback.format_exc()[-4000:]}
+        failed = 1
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec.get("status")
+    if status == "ok":
+        r = rec["roofline"]
+        coll_cmp = ""
+        if is_train:
+            coll_cmp = (f"coll_bf16={r['collective_s_bf16']:.4f}s "
+                        f"coll_int8={r['collective_s_int8']:.4f}s ")
+        print(f"  ok: compile={rec['compile_s']}s "
+              f"dom={r['dominant']} "
+              f"compute={r['compute_s']:.4f}s "
+              f"mem={r['memory_s']:.4f}s "
+              f"coll={r['collective_s']:.4f}s "
+              + coll_cmp +
+              f"frac={r['roofline_fraction'] and round(r['roofline_fraction'], 3)}",
+              flush=True)
+    else:
+        print(f"  {status}: {rec.get('skip_reason') or rec.get('error', '')[:200]}",
+              flush=True)
+    return failed
 
 
 if __name__ == "__main__":

@@ -71,6 +71,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--grad-transport", default="bf16",
+                    choices=step_lib.GRAD_TRANSPORTS,
+                    help="int8_ef = blockwise int8 + error feedback on the "
+                         "gradient reduction (residual in optimizer state)")
     ap.add_argument("--compact-every", type=int, default=25)
     args = ap.parse_args()
 
@@ -86,12 +90,14 @@ def main() -> None:
 
     key = jax.random.PRNGKey(0)
     params = transformer.init_params(cfg, key)
-    opt_state = opt_lib.init_state(params)
+    opt_state = opt_lib.init_state(
+        params, error_feedback=args.grad_transport == "int8_ef")
     adamw = opt_lib.AdamWConfig(lr=1e-3, warmup_steps=10,
                                 total_steps=args.steps)
     with shd.axis_rules(mesh):
         step_fn = jax.jit(step_lib.make_train_step(
-            cfg, adamw, microbatches=args.microbatches))
+            cfg, adamw, microbatches=args.microbatches,
+            grad_transport=args.grad_transport))
 
     ckpt = CheckpointManager(store, keep_last=2)
     autocomp = build_autocomp(catalog, clock)

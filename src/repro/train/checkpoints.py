@@ -63,19 +63,23 @@ class CheckpointManager:
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, blocking: bool = True) -> None:
         self.wait()                   # one in-flight async save at a time
-        leaves, treedef = jax.tree.flatten(tree)
-        host_leaves = [np.asarray(l) for l in leaves]   # device->host now
+        with_path, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        # keypaths make restore structure-aware: a restoring job whose state
+        # tree gained leaves (e.g. the int8_ef transport residual) can match
+        # by key instead of position
+        keys = [jax.tree_util.keystr(kp) for kp, _ in with_path]
+        host_leaves = [np.asarray(l) for _, l in with_path]  # device->host now
 
         def do_save():
             base = f"{self.prefix}/step-{step:08d}"
             entries = []
             datafiles = []
-            for i, arr in enumerate(host_leaves):
+            for i, (key, arr) in enumerate(zip(keys, host_leaves)):
                 path = f"{base}/leaf-{i:05d}.npy"
                 raw = _leaf_bytes(arr)
                 self.store.put(path, raw)
                 entries.append({"path": path, "shape": list(arr.shape),
-                                "dtype": str(arr.dtype)})
+                                "dtype": str(arr.dtype), "key": key})
                 datafiles.append(DataFile(path=path, size_bytes=len(raw),
                                           num_rows=int(arr.size),
                                           partition=f"step-{step:08d}"))
@@ -109,28 +113,61 @@ class CheckpointManager:
         return sorted(steps)
 
     def restore(self, tree_like: Any, step: Optional[int] = None,
-                shardings: Optional[Any] = None) -> Tuple[Any, int]:
+                shardings: Optional[Any] = None,
+                partial_ok: bool = False) -> Tuple[Any, int]:
         """Restore into the structure of ``tree_like``; optionally lay out
-        each leaf with ``shardings`` (elastic restore onto any mesh)."""
+        each leaf with ``shardings`` (elastic restore onto any mesh).
+
+        When the manifest carries keypaths (all saves since they were added),
+        leaves are matched by key, so ``tree_like`` may have a different leaf
+        *order*. With ``partial_ok=True`` leaves of ``tree_like`` that are
+        absent from the checkpoint keep their reference value — this is how a
+        run that switches ``grad_transport`` to int8_ef restores a pre-switch
+        checkpoint: the fresh zero residual in ``opt_state["ef"]`` survives.
+        Old keyless manifests fall back to strict positional matching.
+        """
         steps = self.available_steps()
         if not steps:
             raise FileNotFoundError("no checkpoints available")
         step = steps[-1] if step is None else step
         base = f"{self.prefix}/step-{step:08d}"
         manifest = json.loads(self.store.get(f"{base}/MANIFEST.json"))
-        leaves, treedef = jax.tree.flatten(tree_like)
-        assert len(leaves) == len(manifest["leaves"]), \
-            f"leaf count mismatch: {len(leaves)} vs {len(manifest['leaves'])}"
+        ents = manifest["leaves"]
+        with_path, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+        keyed = all("key" in e for e in ents)
+        if keyed:
+            by_key = {e["key"]: e for e in ents}
+            matched = [(jax.tree_util.keystr(kp), ref,
+                        by_key.get(jax.tree_util.keystr(kp)))
+                       for kp, ref in with_path]
+            missing = [k for k, _, e in matched if e is None]
+            tree_keys = {k for k, _, _ in matched}
+            extra = [k for k in by_key if k not in tree_keys]
+            if (missing or extra) and not partial_ok:
+                raise KeyError(
+                    f"checkpoint step-{step} / tree mismatch: tree leaves "
+                    f"missing from checkpoint {missing[:5]}, checkpoint "
+                    f"leaves absent from tree {extra[:5]} (pass "
+                    f"partial_ok=True to restore the intersection)")
+        else:
+            assert len(with_path) == len(ents), \
+                f"leaf count mismatch: {len(with_path)} vs {len(ents)}"
+            matched = [(jax.tree_util.keystr(kp), ref, ent)
+                       for (kp, ref), ent in zip(with_path, ents)]
         out = []
         shard_leaves = None
         if shardings is not None:
             shard_leaves = jax.tree.flatten(shardings)[0]
-        for i, (ref, ent) in enumerate(zip(leaves, manifest["leaves"])):
-            arr = _leaf_from_bytes(self.store.get(ent["path"]),
-                                   ent["shape"], ent["dtype"])
+        for i, (key, ref, ent) in enumerate(matched):
+            if ent is None:                    # partial_ok: keep current value
+                arr = np.zeros(ref.shape, ref.dtype) \
+                    if isinstance(ref, jax.ShapeDtypeStruct) else np.asarray(ref)
+            else:
+                arr = _leaf_from_bytes(self.store.get(ent["path"]),
+                                       ent["shape"], ent["dtype"])
             ref_np = ref if hasattr(ref, "shape") else np.asarray(ref)
             assert tuple(arr.shape) == tuple(ref_np.shape), \
-                f"shape mismatch at leaf {i}: {arr.shape} vs {ref_np.shape}"
+                f"shape mismatch at leaf {key}: {arr.shape} vs {ref_np.shape}"
             if shard_leaves is not None:
                 out.append(jax.device_put(arr, shard_leaves[i]))
             else:

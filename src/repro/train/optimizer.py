@@ -4,8 +4,11 @@ The moments inherit each parameter's logical axes, so optimizer state is
 sharded exactly like the parameters (ZeRO-style when FSDP rules are active).
 Cross-pod gradient "compression" falls out of the dtype split: gradients
 cross the network in bf16 (reduce-scatter/all-reduce), while Adam runs in
-fp32 on the local shard. An explicit int8+error-feedback collective lives in
-repro.dist.collectives for the hillclimb experiments.
+fp32 on the local shard. The explicit int8+error-feedback transport
+(``grad_transport="int8_ef"`` in ``make_train_step``) carries its per-leaf
+residual in this state under the ``"ef"`` key — ``init_state`` /
+``abstract_state`` / ``state_axes`` grow it when ``error_feedback=True``,
+and ``apply_updates`` passes it through untouched (the train step owns it).
 """
 
 from __future__ import annotations
@@ -38,22 +41,45 @@ def lr_schedule(cfg: AdamWConfig, step):
     return cfg.lr * warm * (0.1 + 0.9 * cos)
 
 
-def init_state(params) -> Dict[str, Any]:
+def _ef_shape(p, ef_devices: Optional[int]) -> Tuple[int, ...]:
+    # the shard_map data-parallel transport carries one residual per device
+    # (each device's quantization error differs); the SPMD path carries a
+    # single parameter-shaped residual.
+    return tuple(p.shape) if ef_devices is None \
+        else (ef_devices,) + tuple(p.shape)
+
+
+def init_state(params, error_feedback: bool = False,
+               ef_devices: Optional[int] = None) -> Dict[str, Any]:
     f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
-    return {"mu": jax.tree.map(f32, params),
-            "nu": jax.tree.map(f32, params),
-            "step": jnp.zeros((), jnp.int32)}
+    state = {"mu": jax.tree.map(f32, params),
+             "nu": jax.tree.map(f32, params),
+             "step": jnp.zeros((), jnp.int32)}
+    if error_feedback:
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(_ef_shape(p, ef_devices), jnp.float32), params)
+    return state
 
 
-def abstract_state(abstract_params) -> Dict[str, Any]:
+def abstract_state(abstract_params, error_feedback: bool = False,
+                   ef_devices: Optional[int] = None) -> Dict[str, Any]:
     f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
-    return {"mu": jax.tree.map(f32, abstract_params),
-            "nu": jax.tree.map(f32, abstract_params),
-            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state = {"mu": jax.tree.map(f32, abstract_params),
+             "nu": jax.tree.map(f32, abstract_params),
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if error_feedback:
+        state["ef"] = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(_ef_shape(p, ef_devices),
+                                           jnp.float32), abstract_params)
+    return state
 
 
-def state_axes(param_axes_tree) -> Dict[str, Any]:
-    return {"mu": param_axes_tree, "nu": param_axes_tree, "step": ()}
+def state_axes(param_axes_tree, error_feedback: bool = False
+               ) -> Dict[str, Any]:
+    axes = {"mu": param_axes_tree, "nu": param_axes_tree, "step": ()}
+    if error_feedback:
+        axes["ef"] = param_axes_tree   # residual sharded exactly like params
+    return axes
 
 
 def global_norm(tree) -> jnp.ndarray:
@@ -92,4 +118,7 @@ def apply_updates(cfg: AdamWConfig, params, grads, state
     new_mu = treedef.unflatten([o[1] for o in out])
     new_nu = treedef.unflatten([o[2] for o in out])
     metrics = {"grad_norm": gnorm, "lr": lr}
-    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, metrics
+    # extra entries (e.g. the "ef" transport residual) ride through untouched
+    new_state = dict(state)
+    new_state.update({"mu": new_mu, "nu": new_nu, "step": step})
+    return new_p, new_state, metrics

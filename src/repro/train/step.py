@@ -13,8 +13,11 @@ import jax.numpy as jnp
 
 from repro.configs import ModelConfig
 from repro.configs.shapes import ShapeSpec
+from repro.dist import collectives
 from repro.models import transformer
 from repro.train import optimizer as opt_lib
+
+GRAD_TRANSPORTS = ("bf16", "int8_ef")
 
 
 def make_loss_fn(cfg: ModelConfig):
@@ -32,19 +35,56 @@ def _split_microbatches(batch: Dict[str, Any], n_mb: int) -> Dict[str, Any]:
     return jax.tree.map(split, batch)
 
 
+def _int8_ef_transport(grads, opt_state, axis_name, block):
+    """Per-leaf int8+error-feedback reduction; residual lives in opt_state."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(opt_state["ef"])
+    out = [collectives.compressed_psum(g, axis_name, e, block=block)
+           for g, e in zip(flat_g, flat_e)]
+    new_grads = treedef.unflatten([o[0] for o in out])
+    new_ef = treedef.unflatten([o[1] for o in out])
+    return new_grads, {**opt_state, "ef": new_ef}
+
+
 def make_train_step(cfg: ModelConfig, adamw: opt_lib.AdamWConfig,
-                    microbatches: int = 1):
+                    microbatches: int = 1, grad_transport: str = "bf16",
+                    mesh=None, data_axis: str = "data", ef_block: int = 256):
     """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
 
     Gradient accumulation runs as a ``lax.scan`` over microbatches; gradients
-    are accumulated in fp32 and averaged. With FSDP/ZeRO rules the gradient
-    reduction crosses the network in bf16 (network dtype), while the AdamW
-    math is fp32 on the local shard.
+    are accumulated in fp32 and averaged.
+
+    ``grad_transport`` picks how the gradient crosses the network:
+
+    * ``"bf16"`` — the baseline. With FSDP/ZeRO rules the reduction crosses
+      in bf16 (network dtype) while the AdamW math is fp32 on the shard.
+    * ``"int8_ef"`` — blockwise int8 quantization with error feedback
+      (``repro.dist.collectives.compressed_psum``); the per-leaf residual is
+      carried in optimizer state under ``opt_state["ef"]``, so build the
+      state with ``opt_lib.init_state(params, error_feedback=True)``.
+
+    Two execution modes:
+
+    * ``mesh=None`` (default) — the SPMD step the dry-run lowers: XLA owns
+      the collectives, so int8_ef applies quantize→dequantize+EF to the
+      already-reduced gradient (compression *error* and residual carry are
+      exact; the wire stays XLA's).
+    * ``mesh=<jax Mesh>`` — an explicit data-parallel step wrapped in
+      ``shard_map`` over ``data_axis`` (the cross-pod role): params and
+      moments replicated, the batch split, and the gradient reduction done
+      manually — bf16 ``psum`` vs the two-stage int8 exchange — so the
+      compiled HLO moves exactly the transport's bytes. This is the path
+      the forced-8-device mesh tests compile, execute, and measure.
+      ``opt_state["ef"]`` is per-device here: build it with
+      ``init_state(params, error_feedback=True, ef_devices=W)``.
     """
+    if grad_transport not in GRAD_TRANSPORTS:
+        raise ValueError(f"unknown grad_transport {grad_transport!r}; "
+                         f"expected one of {GRAD_TRANSPORTS}")
     loss_fn = make_loss_fn(cfg)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
-    def train_step(params, opt_state, batch):
+    def grads_and_metrics(params, batch):
         if microbatches > 1:
             mb = _split_microbatches(batch, microbatches)
 
@@ -57,18 +97,72 @@ def make_train_step(cfg: ModelConfig, adamw: opt_lib.AdamWConfig,
 
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
             (gsum, lsum), metrics_stack = jax.lax.scan(accum, (g0, 0.0), mb)
-            grads = jax.tree.map(lambda g: (g / microbatches).astype(jnp.bfloat16),
-                                 gsum)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            if grad_transport == "bf16":
+                grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
             metrics = jax.tree.map(lambda m: m[-1], metrics_stack)
             metrics["loss"] = lsum / microbatches
         else:
             (loss, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = grads_and_metrics(params, batch)
+        if grad_transport == "int8_ef":
+            grads, opt_state = _int8_ef_transport(grads, opt_state, None,
+                                                  ef_block)
         new_params, new_opt, opt_metrics = opt_lib.apply_updates(
             adamw, params, grads, opt_state)
         metrics.update(opt_metrics)
         return new_params, new_opt, metrics
 
-    return train_step
+    if mesh is None:
+        return train_step
+    return _data_parallel_step(grads_and_metrics, adamw, mesh, data_axis,
+                               grad_transport, ef_block)
+
+
+def _data_parallel_step(grads_and_metrics, adamw, mesh, data_axis,
+                        grad_transport, ef_block):
+    """shard_map DDP wrapper: batch split over ``data_axis``, params/moments
+    replicated, the gradient reduction explicit (and therefore measurable)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    w = mesh.shape[data_axis]
+
+    def device_step(params, opt_state, batch):
+        grads, metrics = grads_and_metrics(params, batch)
+        # each device holds d(mean local loss); global grad = psum(local)/W
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) / w, grads)
+        if grad_transport == "bf16":
+            grads = jax.tree.map(
+                lambda g: jax.lax.psum(g.astype(jnp.bfloat16), data_axis),
+                grads)
+        else:
+            local = {**opt_state,
+                     "ef": jax.tree.map(lambda e: e[0], opt_state["ef"])}
+            grads, local = _int8_ef_transport(grads, local, data_axis,
+                                              ef_block)
+            opt_state = {**opt_state,
+                         "ef": jax.tree.map(lambda e: e[None], local["ef"])}
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, data_axis), metrics)
+        new_params, new_opt, opt_metrics = opt_lib.apply_updates(
+            adamw, params, grads, opt_state)
+        metrics.update(opt_metrics)
+        return new_params, new_opt, metrics
+
+    def opt_spec(with_ef):
+        spec = {"mu": P(), "nu": P(), "step": P()}
+        if with_ef:
+            spec["ef"] = P(data_axis)   # per-device residual, leading axis
+        return spec
+
+    ospec = opt_spec(grad_transport == "int8_ef")
+    return shard_map(device_step, mesh=mesh,
+                     in_specs=(P(), ospec, P(data_axis)),
+                     out_specs=(P(), ospec, P()),
+                     check_rep=False)
 
 
 def make_encode_step(cfg: ModelConfig):
@@ -96,11 +190,13 @@ def make_decode_step(cfg: ModelConfig, cache_len_total: int):
 
 
 def step_for_shape(cfg: ModelConfig, shape: ShapeSpec,
-                   adamw: Optional[opt_lib.AdamWConfig] = None):
+                   adamw: Optional[opt_lib.AdamWConfig] = None,
+                   grad_transport: str = "bf16"):
     """The function the dry-run lowers for a given cell, plus its kind."""
     if shape.kind == "train":
         return make_train_step(cfg, adamw or opt_lib.AdamWConfig(),
-                               microbatches=shape.microbatches), "train"
+                               microbatches=shape.microbatches,
+                               grad_transport=grad_transport), "train"
     if shape.kind == "prefill":
         if not cfg.supports_decode:      # encoder: no cache semantics
             return make_encode_step(cfg), "encode"

@@ -109,6 +109,49 @@ class TestHloCollectives:
         assert rows[0]["bytes"] >= rows[-1]["bytes"]
 
 
+S8_HLO = """\
+HloModule int8exchange
+
+ENTRY %main (a: s8[1,256]) -> s8[4,256] {
+  %a2a = s8[4,256]{1,0} all-to-all(%chunks), replica_groups={{0,2,4,6},{1,3,5,7}}, dimensions={0}
+  %ar = bf16[1024]{0} all-reduce(%g), replica_groups={{0,2,4,6},{1,3,5,7}}, to_apply=%sum
+  ROOT %ag = s8[4,256]{1,0} all-gather(%a), replica_groups={{0,2,4,6},{1,3,5,7}}, dimensions={0}
+}
+"""
+
+
+class TestWireBytes:
+    """Ring wire model: all-reduce moves 2(g-1)/g of the payload, gather /
+    all-to-all move (g-1)/g — this is what roofline collective_s now uses,
+    and what makes the int8-vs-bf16 transport comparison honest."""
+
+    def test_all_reduce_wire_is_2x_ring_fraction(self):
+        agg = analysis.hlo_collective_bytes(SYNTH_HLO)
+        # replica_groups=[2,4]<=[8]: group size 4 -> 2 * 3/4 of 32 bytes
+        assert agg["all-reduce"]["wire_bytes"] == 5 * int(2 * 0.75 * 32)
+        assert agg["all-gather"]["wire_bytes"] == int(0.75 * 32 * 4)
+        assert agg["total_wire_bytes"] == (
+            agg["all-reduce"]["wire_bytes"] + agg["all-gather"]["wire_bytes"])
+
+    def test_list_form_replica_groups_and_s8_payloads(self):
+        agg = analysis.hlo_collective_bytes(S8_HLO)
+        # group size 4 from {{0,2,4,6},...}; s8 counts 1 byte/element
+        assert agg["all-to-all"]["bytes"] == 4 * 256
+        assert agg["all-to-all"]["wire_bytes"] == int(0.75 * 4 * 256)
+        assert agg["all-gather"]["bytes"] == 4 * 256
+        # bf16 payloads are already network dtype: eq == raw
+        assert agg["all-reduce"]["wire_bytes_bf16eq"] == \
+            agg["all-reduce"]["wire_bytes"] == int(2 * 0.75 * 1024 * 2)
+
+    def test_int8_exchange_beats_bf16_all_reduce_per_element(self):
+        """The core trade the transport exploits: for the same element count
+        (1024), a2a+gather of s8 moves less wire than a bf16 all-reduce."""
+        agg = analysis.hlo_collective_bytes(S8_HLO)
+        int8_wire = (agg["all-to-all"]["wire_bytes"]
+                     + agg["all-gather"]["wire_bytes"])
+        assert int8_wire < agg["all-reduce"]["wire_bytes"]
+
+
 class TestModelFlops:
     def test_train_formula(self):
         from repro.configs import get_config

@@ -68,6 +68,49 @@ class TestResolveSpec:
         assert set(out) == {"w"}
 
 
+class TestPresets:
+    def _mesh(self):
+        from jax.sharding import AbstractMesh
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+    def test_registry_has_all_presets(self):
+        assert {"baseline", "sp", "ddp", "ep", "fsdp"} <= set(shd.PRESETS)
+
+    def test_ep_distributes_experts_over_data(self):
+        """qwen3-30b w_gate (128 experts, 2048, 768): EP puts whole experts
+        on the data axis and keeps tensor parallelism inside the expert —
+        baseline instead burns the model axis on the expert dim."""
+        mesh = self._mesh()
+        axes = ("experts", "embed", "expert_mlp")
+        ep = shd.resolve_spec((128, 2048, 768), axes, mesh,
+                              shd.PRESETS["ep"])
+        assert ep == P("data", None, "model")
+        base = shd.resolve_spec((128, 2048, 768), axes, mesh,
+                                shd.PRESETS["baseline"])
+        assert base == P("model", "data")   # expert_mlp left unsharded
+
+    def test_fsdp_shards_weights_over_pod(self):
+        mesh = self._mesh()
+        spec = shd.resolve_spec((151936, 4096), ("vocab", "embed"), mesh,
+                                shd.PRESETS["fsdp"])
+        assert spec == P("model", ("pod", "data"))
+        base = shd.resolve_spec((151936, 4096), ("vocab", "embed"), mesh,
+                                shd.PRESETS["baseline"])
+        assert base == P("model", "data")   # baseline stops at the pod edge
+
+    def test_new_presets_keep_each_axis_once(self):
+        mesh = self._mesh()
+        for preset in ("ep", "fsdp"):
+            spec = shd.resolve_spec((256, 4096, 64, 64),
+                                    ("batch", "embed", "heads", "head_dim"),
+                                    mesh, shd.PRESETS[preset])
+            flat = []
+            for e in spec:
+                if e is not None:
+                    flat.extend(e if isinstance(e, tuple) else [e])
+            assert len(flat) == len(set(flat))
+
+
 class TestCompressedCollectives:
     @given(st.integers(min_value=1, max_value=2000),
            st.floats(min_value=0.01, max_value=100.0))

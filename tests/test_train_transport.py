@@ -1,0 +1,142 @@
+"""Gradient-transport correctness on a single device: the int8_ef transport
+(blockwise int8 + error feedback, ``grad_transport="int8_ef"``) converges to
+within tolerance of the bf16 baseline on a scaled-down paper_lm_100m
+(same family, tied embeddings, GQA 2:1 — only the dims shrink for CPU), and
+the per-leaf residual in ``opt_state["ef"]`` round-trips through checkpoint
+save/restore, including restore *from a pre-EF checkpoint* via keypath
+matching + ``partial_ok``."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.lst import InMemoryStore
+from repro.models import transformer
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+from repro.train.checkpoints import CheckpointManager
+
+# paper-lm-100m with every dim divided down for CPU; aspect ratios intact
+CFG = dataclasses.replace(
+    get_config("paper-lm-100m"), name="paper-lm-scaled", n_layers=2,
+    d_model=256, n_heads=4, n_kv_heads=2, head_dim=64, d_ff=512, vocab=512)
+
+STEPS = 20
+
+
+def _data(seed=0, n=4, batch=8, seq=32):
+    rng = np.random.RandomState(seed)
+    slabs = rng.randint(0, CFG.vocab, size=(n, batch, seq + 1)).astype(np.int32)
+    return [{"tokens": s[:, :-1], "labels": s[:, 1:]} for s in slabs]
+
+
+def _train(grad_transport, steps=STEPS, microbatches=2):
+    params = transformer.init_params(CFG, jax.random.PRNGKey(0))
+    opt = opt_lib.init_state(params,
+                             error_feedback=grad_transport == "int8_ef")
+    adamw = opt_lib.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    step = jax.jit(step_lib.make_train_step(
+        CFG, adamw, microbatches=microbatches, grad_transport=grad_transport))
+    data = _data()
+    losses = []
+    for i in range(steps):
+        params, opt, metrics = step(params, opt, data[i % len(data)])
+        losses.append(float(metrics["loss"]))
+    return params, opt, losses
+
+
+class TestInt8EfConvergence:
+    def test_tracks_bf16_baseline(self):
+        _, _, l_bf16 = _train("bf16")
+        _, opt, l_int8 = _train("int8_ef")
+        # both learn ...
+        assert l_bf16[-1] < l_bf16[0] - 0.05
+        assert l_int8[-1] < l_int8[0] - 0.05
+        # ... and the compressed run lands within tolerance of the baseline
+        assert abs(l_int8[-1] - l_bf16[-1]) <= 0.05 * abs(l_bf16[-1]), \
+            (l_int8[-1], l_bf16[-1])
+
+    def test_residual_is_carried(self):
+        _, opt, _ = _train("int8_ef", steps=2)
+        ef_l1 = sum(float(jnp.sum(jnp.abs(e)))
+                    for e in jax.tree.leaves(opt["ef"]))
+        assert ef_l1 > 0.0                     # quantization error accumulated
+        # residual leaves mirror the parameter tree
+        assert (jax.tree.structure(opt["ef"]) ==
+                jax.tree.structure(opt["mu"]))
+
+    def test_missing_ef_state_raises(self):
+        params = transformer.init_params(CFG, jax.random.PRNGKey(0))
+        opt = opt_lib.init_state(params)       # no error_feedback
+        step = step_lib.make_train_step(CFG, opt_lib.AdamWConfig(),
+                                        grad_transport="int8_ef")
+        with pytest.raises(KeyError):
+            step(params, opt, _data()[0])
+
+    def test_unknown_transport_rejected(self):
+        with pytest.raises(ValueError):
+            step_lib.make_train_step(CFG, opt_lib.AdamWConfig(),
+                                     grad_transport="fp4")
+
+
+class TestEfCheckpointRoundTrip:
+    def test_residual_survives_save_restore(self):
+        params, opt, _ = _train("int8_ef", steps=3)
+        ckpt = CheckpointManager(InMemoryStore(), keep_last=2)
+        ckpt.save(3, (params, opt), blocking=True)
+        like = (jax.tree.map(jnp.zeros_like, params),
+                jax.tree.map(jnp.zeros_like, opt))
+        (rp, ro), step = ckpt.restore(like)
+        assert step == 3
+        for a, b in zip(jax.tree.leaves(opt["ef"]),
+                        jax.tree.leaves(ro["ef"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(ro["step"]) == int(opt["step"])
+
+    def test_manifest_records_keypaths(self):
+        import json
+        params, opt, _ = _train("int8_ef", steps=1)
+        store = InMemoryStore()
+        ckpt = CheckpointManager(store, keep_last=2)
+        ckpt.save(1, (params, opt), blocking=True)
+        manifest = json.loads(store.get("ckpt/step-00000001/MANIFEST.json"))
+        keys = {e["key"] for e in manifest["leaves"]}
+        assert any("'ef'" in k for k in keys)
+        assert len(keys) == len(manifest["leaves"])   # keypaths are unique
+
+    def test_pre_ef_checkpoint_restores_with_partial_ok(self):
+        """Switching grad_transport mid-run: a checkpoint saved without the
+        residual restores into EF-bearing state; the fresh residual keeps
+        its (zero) value."""
+        params, opt, _ = _train("bf16", steps=3)
+        ckpt = CheckpointManager(InMemoryStore(), keep_last=2)
+        ckpt.save(3, (params, opt), blocking=True)
+        like_params = jax.tree.map(jnp.zeros_like, params)
+        like_opt = opt_lib.init_state(like_params, error_feedback=True)
+        with pytest.raises(KeyError):
+            ckpt.restore((like_params, like_opt))
+        (rp, ro), _ = ckpt.restore((like_params, like_opt), partial_ok=True)
+        assert "ef" in ro
+        for e in jax.tree.leaves(ro["ef"]):
+            np.testing.assert_array_equal(np.asarray(e), 0.0)
+        # restored moments match the saved ones
+        for a, b in zip(jax.tree.leaves(opt["mu"]), jax.tree.leaves(ro["mu"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_ef_checkpoint_into_bf16_state_needs_partial_ok(self):
+        """The symmetric direction: dropping checkpoint leaves (the saved
+        residual) must be an explicit decision, not a silent discard."""
+        params, opt, _ = _train("int8_ef", steps=2)
+        ckpt = CheckpointManager(InMemoryStore(), keep_last=2)
+        ckpt.save(2, (params, opt), blocking=True)
+        like = (jax.tree.map(jnp.zeros_like, params),
+                opt_lib.init_state(params))          # no "ef"
+        with pytest.raises(KeyError):
+            ckpt.restore(like)
+        (_, ro), _ = ckpt.restore(like, partial_ok=True)
+        assert "ef" not in ro
+        assert int(ro["step"]) == int(opt["step"])
