@@ -1,7 +1,8 @@
 """§Roofline table emitter: reads the dry-run JSON records (experiments/
 dryrun/) and prints one row per (arch x shape x mesh) cell with the three
-terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and — for train
-cells — the int8-vs-bf16 gradient-transport collective comparison.
+terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the int8-vs-bf16
+collective comparison (modeled gradient transport for train cells, measured
+activation transport for serve cells).
 
 ``--json PATH`` additionally writes the full record set as a trajectory
 artifact (the CI bench-smoke job uploads it as ``BENCH_roofline.json``) so
@@ -28,7 +29,8 @@ def main(outdir: str = "experiments/dryrun") -> List[str]:
     ok = skip = 0
     for r in load(outdir):
         tag = f"{r['arch']};{r['shape']};{r['mesh']}"
-        variant = [v for v in (r.get("preset"), r.get("grad_transport"))
+        variant = [v for v in (r.get("preset"), r.get("grad_transport"),
+                               r.get("act_transport"))
                    if v and v not in ("baseline", "bf16")]
         if variant:
             tag += ";" + "-".join(variant)
@@ -42,8 +44,9 @@ def main(outdir: str = "experiments/dryrun") -> List[str]:
         ok += 1
         rf = r["roofline"]
         coll_cmp = ""
-        if rf.get("collective_s_int8") is not None \
-                and r.get("kind") == "train":
+        if rf.get("collective_s_int8") is not None:
+            # train: modeled int8_ef grad transport; serve: *measured*
+            # act_transport comparison (both programs compiled)
             coll_cmp = (f";coll_bf16={rf['collective_s_bf16']:.4f}"
                         f";coll_int8={rf['collective_s_int8']:.4f}")
         rows.append(

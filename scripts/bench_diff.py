@@ -1,0 +1,151 @@
+#!/usr/bin/env python
+"""Bench trajectory gate: diff a fresh ``BENCH_roofline.json`` against the
+previous run's artifact and fail on performance regressions.
+
+The CI ``bench-smoke`` job downloads the ``BENCH_roofline`` artifact from
+the last successful main run and calls::
+
+    python scripts/bench_diff.py --current BENCH_roofline.json \
+        --baseline baseline/BENCH_roofline.json
+
+Cells are matched by (arch, shape, mesh, preset, grad_transport,
+act_transport). A cell regresses when a lower-is-better metric
+(``collective_s``) grows, or a higher-is-better metric
+(``roofline_fraction``) shrinks, by more than ``--threshold`` (default
+15%). A missing/unreadable baseline is tolerated (first run, expired
+artifact): the gate passes with a note. Cells present on only one side are
+reported but never fail the gate — sweeps legitimately grow.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+# metric -> direction: "lower" means growth is a regression, "higher"
+# means shrinkage is
+METRICS: Dict[str, str] = {
+    "collective_s": "lower",
+    "roofline_fraction": "higher",
+}
+
+DEFAULT_THRESHOLD = 0.15
+
+
+def cell_key(rec: Dict[str, Any]) -> Tuple:
+    # every field that names a distinct dry-run variant must participate,
+    # or variant cells silently collide and diff against the wrong baseline
+    return (rec.get("arch"), rec.get("shape"), rec.get("mesh"),
+            rec.get("preset"), rec.get("grad_transport"),
+            rec.get("act_transport"), rec.get("microbatches"),
+            rec.get("remat_block"), rec.get("capacity_factor"))
+
+
+def _ok_cells(records: List[Dict[str, Any]]) -> Dict[Tuple, Dict[str, Any]]:
+    return {cell_key(r): r for r in records
+            if r.get("status") == "ok" and isinstance(r.get("roofline"), dict)}
+
+
+def diff_trajectories(current: List[Dict[str, Any]],
+                      baseline: List[Dict[str, Any]],
+                      threshold: float = DEFAULT_THRESHOLD,
+                      metrics: Optional[Dict[str, str]] = None
+                      ) -> Dict[str, Any]:
+    """Compare two record lists; returns {regressions, compared, only_*}.
+
+    Each regression is ``{key, metric, baseline, current, change}`` with
+    ``change`` the signed relative move in the bad direction (e.g. +0.30
+    for a 30% collective_s growth).
+    """
+    metrics = METRICS if metrics is None else metrics
+    cur = _ok_cells(current)
+    base = _ok_cells(baseline)
+    regressions: List[Dict[str, Any]] = []
+    compared = 0
+    for key, crec in cur.items():
+        brec = base.get(key)
+        if brec is None:
+            continue
+        compared += 1
+        for metric, direction in metrics.items():
+            cval = crec["roofline"].get(metric)
+            bval = brec["roofline"].get(metric)
+            if not isinstance(cval, (int, float)) \
+                    or not isinstance(bval, (int, float)) or bval == 0:
+                continue
+            rel = (cval - bval) / abs(bval)
+            bad = rel if direction == "lower" else -rel
+            if bad > threshold:
+                regressions.append({
+                    "key": key, "metric": metric,
+                    "baseline": bval, "current": cval,
+                    "change": round(bad, 4),
+                })
+    return {
+        "regressions": regressions,
+        "compared": compared,
+        "only_current": sorted(str(k) for k in cur.keys() - base.keys()),
+        "only_baseline": sorted(str(k) for k in base.keys() - cur.keys()),
+    }
+
+
+def load_records(path: str) -> Optional[List[Dict[str, Any]]]:
+    """Records list from a BENCH_roofline.json payload; None if unusable."""
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        recs = payload.get("records") if isinstance(payload, dict) else None
+        return recs if isinstance(recs, list) else None
+    except (OSError, ValueError):
+        return None
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True,
+                    help="fresh BENCH_roofline.json")
+    ap.add_argument("--baseline", required=True,
+                    help="previous run's BENCH_roofline.json "
+                         "(missing => tolerated, gate passes)")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative regression tolerance (default 0.15)")
+    args = ap.parse_args(argv)
+
+    current = load_records(args.current)
+    if current is None:
+        print(f"[bench-diff] FAIL: current trajectory {args.current!r} "
+              "missing or unreadable")
+        return 1
+    baseline = load_records(args.baseline)
+    if baseline is None:
+        print(f"[bench-diff] no usable baseline at {args.baseline!r} "
+              "(first run or expired artifact) — gate passes")
+        return 0
+
+    res = diff_trajectories(current, baseline, threshold=args.threshold)
+    print(f"[bench-diff] compared {res['compared']} cells "
+          f"(threshold {args.threshold:.0%}); "
+          f"{len(res['only_current'])} new, "
+          f"{len(res['only_baseline'])} baseline-only")
+    for k in res["only_current"]:
+        print(f"  new cell (not gated): {k}")
+    for k in res["only_baseline"]:
+        print(f"  dropped cell (not gated): {k}")
+    if not res["regressions"]:
+        print("[bench-diff] OK: no regression beyond threshold")
+        return 0
+    for r in res["regressions"]:
+        print(f"  REGRESSION {r['key']}: {r['metric']} "
+              f"{r['baseline']:.6g} -> {r['current']:.6g} "
+              f"({r['change']:+.1%} in the bad direction)")
+    print(f"[bench-diff] FAIL: {len(res['regressions'])} regression(s)")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

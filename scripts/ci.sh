@@ -13,4 +13,5 @@ if [[ "${SKIP_INSTALL:-0}" != "1" ]]; then
     python -m pip install -r requirements-dev.txt
 fi
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# --durations=15 keeps slow-test creep visible in every CI log
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q --durations=15 "$@"

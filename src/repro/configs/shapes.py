@@ -30,12 +30,34 @@ class ShapeSpec:
 
 SHAPES: Dict[str, ShapeSpec] = {
     "train_4k": ShapeSpec("train_4k", "train", 4_096, 256, microbatches=8),
+    "prefill_8k": ShapeSpec("prefill_8k", "prefill", 8_192, 64),
     "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
     "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
     "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
 }
 
 SHAPE_IDS = tuple(SHAPES)
+
+
+def expand_shape_names(spec: str) -> Tuple[str, ...]:
+    """Expand a comma list of shape names and/or kinds into shape names.
+
+    ``"decode"`` -> every decode-kind shape, ``"prefill_8k,decode"`` ->
+    that shape plus the decode shapes, ``"all"`` -> everything. Raises
+    ``KeyError`` on an unknown token.
+    """
+    if spec == "all":
+        return SHAPE_IDS
+    out = []
+    for tok in spec.split(","):
+        if tok in SHAPES:
+            out.append(tok)
+        elif tok in ("train", "prefill", "decode"):
+            out.extend(n for n, s in SHAPES.items() if s.kind == tok)
+        else:
+            raise KeyError(f"unknown shape or kind {tok!r}; "
+                           f"known: {', '.join(SHAPE_IDS)} + train/prefill/decode")
+    return tuple(dict.fromkeys(out))
 
 
 def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:

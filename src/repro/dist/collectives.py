@@ -8,15 +8,23 @@ scales amortized over the block) and the quantization residual is carried
 into the next step — error feedback — so the *long-run* contribution of
 every element is unbiased even though each step rounds.
 
+The serve path uses the same quantizer for its *activation* all-gathers
+(:func:`act_gather` under an :class:`act_transport_scope`): no error
+feedback there — activations are stateless across steps, so each gather
+quantizes fresh and the error never compounds.
+
 All functions are jit-compatible: shapes are static, no host sync.
 """
 
 from __future__ import annotations
 
+import threading
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.dist import sharding as _shd
 
 
 def quantize_int8(x: jnp.ndarray, block: int = 256
@@ -127,3 +135,107 @@ def compressed_psum(x: jnp.ndarray, axis_name: Optional[str] = None,
     out, new_err = _two_stage_int8_psum(jnp.ravel(carry), axis_name, block)
     return (out.reshape(carry.shape).astype(x.dtype),
             new_err.reshape(carry.shape))
+
+
+# ---------------------------------------------------------------------------
+# serve activation transport: quantized all-gathers, no error feedback
+# ---------------------------------------------------------------------------
+
+ACT_TRANSPORTS = ("bf16", "int8")
+ACT_BLOCK = 256
+
+
+def quantize_int8_lastdim(x: jnp.ndarray, block: int = ACT_BLOCK
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization blocked along the *trailing* axis only.
+
+    Unlike :func:`quantize_int8` (which flattens the whole array), blocks
+    never cross the trailing-axis boundary, so the op stays local under any
+    sharding of the leading axes — the form the serve activation all-gather
+    needs: quantize on the sequence shard, gather the int8 payload, then
+    dequantize on the far side. A trailing dim not divisible by ``block``
+    falls back to one block spanning the whole dim (always valid, coarser
+    scales). Returns ``(q, scales)`` with ``q: int8`` of ``x.shape`` and
+    ``scales: float32`` of ``x.shape[:-1] + (n_blocks,)``.
+    """
+    d = x.shape[-1]
+    b = block if d % block == 0 else d
+    blocks = x.astype(jnp.float32).reshape(x.shape[:-1] + (d // b, b))
+    q, scales = _quantize_blocks(blocks)
+    return q.reshape(x.shape), scales
+
+
+def dequantize_int8_lastdim(q: jnp.ndarray, scales: jnp.ndarray
+                            ) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int8_lastdim` (float32 out)."""
+    nb = scales.shape[-1]
+    d = q.shape[-1]
+    blocks = q.reshape(q.shape[:-1] + (nb, d // nb))
+    return _dequantize_blocks(blocks, scales).reshape(q.shape)
+
+
+class _ActStack(threading.local):
+    def __init__(self):
+        self.items: list = []
+
+
+_act_ctx = _ActStack()
+
+
+def current_act_transport() -> Optional[str]:
+    """Active serve activation transport, or None outside any scope."""
+    return _act_ctx.items[-1] if _act_ctx.items else None
+
+
+class act_transport_scope:
+    """Trace-time scope selecting how serve activation all-gathers cross
+    the wire (``"bf16"`` — plain constrained reshard — or ``"int8"`` —
+    blockwise int8 chunks + scales). Entered by the prefill/decode step
+    factories; model code reads it through :func:`act_gather`. Like
+    ``sharding.axis_rules`` this only affects tracing, so a jitted step
+    keeps the transport it was traced with."""
+
+    def __init__(self, mode: Optional[str]):
+        if mode is not None and mode not in ACT_TRANSPORTS:
+            raise ValueError(f"unknown act_transport {mode!r}; "
+                             f"expected one of {ACT_TRANSPORTS}")
+        self.mode = mode
+
+    def __enter__(self) -> "act_transport_scope":
+        _act_ctx.items.append(self.mode)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        _act_ctx.items.pop()
+        return False
+
+
+def all_gather_int8(x: jnp.ndarray, *logical_axes: Optional[str],
+                    block: int = ACT_BLOCK) -> jnp.ndarray:
+    """Reshard ``x`` to the layout named by ``logical_axes`` moving
+    blockwise int8 + per-block f32 scales on the wire instead of the raw
+    payload: quantize locally (blocks along the trailing axis never cross a
+    shard of the leading axes), constrain the *quantized* arrays to the
+    target layout so XLA's resharding all-gather carries s8, dequantize on
+    the gathered side. ~(1 + 4/block)/2 of the bf16 wire bytes."""
+    q, scales = quantize_int8_lastdim(x, block)
+    q = _shd.constrain(q, *logical_axes)
+    scales = _shd.constrain(scales, *logical_axes[:-1], None)
+    return dequantize_int8_lastdim(q, scales).astype(x.dtype)
+
+
+def act_gather(x: jnp.ndarray, *logical_axes: Optional[str]) -> jnp.ndarray:
+    """The serve activation all-gather boundary.
+
+    Moves ``x`` to the (gathered) layout named by ``logical_axes`` under
+    the active :class:`act_transport_scope`: ``"bf16"`` pins a plain
+    ``constrain`` (XLA reshards the raw payload), ``"int8"`` routes the
+    reshard through :func:`all_gather_int8`. Outside any scope (training,
+    legacy callers) this is the identity, so model code is unchanged
+    everywhere the serve transport is not explicitly enabled."""
+    mode = current_act_transport()
+    if mode is None:
+        return x
+    if mode == "int8":
+        return all_gather_int8(x, *logical_axes)
+    return _shd.constrain(x, *logical_axes)

@@ -62,6 +62,22 @@ _FSDP_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
     (name, ("pod", "data")) if name == "embed" else (name, targets)
     for name, targets in _WEIGHT_RULES)
 
+# Sharded serving: sequence parallelism on the serve path. Prefill keeps
+# the residual stream sequence-sharded over model between blocks ("seq_res",
+# gathered at the attention/MLP boundary via collectives.act_gather); the
+# KV cache shards over data (batch dim) x model (sequence dim, "kv_seq"),
+# so decode's dominant collective is the cache all-gather feeding
+# single-token attention — the gather the int8 act_transport compresses.
+# Weights drop the FSDP embed shard (replicated over data, TP over model):
+# serving is read-only, so a per-token weight regather would just dilute
+# the wire with traffic HBM can hold resident. Ragged continuous batching
+# is untouched: batch stays on data, per-row positions/masks are
+# elementwise over batch.
+_SERVE_SP_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
+    (name, ()) if name == "embed" else (name, targets)
+    for name, targets in _WEIGHT_RULES) \
+    + (("seq_res", ("model",)), ("kv_seq", ("model",)))
+
 # Named rule presets consumed by ``repro.launch.dryrun --preset``.
 PRESETS: Dict[str, Rules] = {
     # data-parallel batch + FSDP weights + tensor-parallel contractions
@@ -75,6 +91,10 @@ PRESETS: Dict[str, Rules] = {
     "ep": _EP_RULES,
     # pod-level FSDP: weight/moment shards cross the pod boundary
     "fsdp": _FSDP_RULES,
+    # serve-side sequence parallelism: residual stream + KV cache over
+    # model's sequence dim, batch over data (see Serving transport in
+    # dist/README.md)
+    "serve_sp": _SERVE_SP_RULES,
 }
 
 DEFAULT_RULES = PRESETS["baseline"]

@@ -217,14 +217,17 @@ def _wire_bytes(op: str, full_bytes: float, g: int) -> float:
 
 
 def _collective_line_bytes(s: str
-                           ) -> Optional[Tuple[str, int, int, int, int]]:
-    """(op, bytes, bf16-equivalent bytes, wire bytes, bf16-eq wire bytes).
+                           ) -> Optional[Tuple[str, int, int, int, int, int]]:
+    """(op, bytes, bf16-eq bytes, wire bytes, bf16-eq wire bytes, s8 wire).
 
     ``bytes`` is the result-shape payload (legacy metric); ``wire_bytes``
     models what actually crosses the links (see :func:`_wire_bytes`). The
     CPU backend promotes bf16 dots to f32, so weight/activation collectives
     appear at 2x their TPU size; the bf16-equivalent numbers halve f32
-    collective payloads (TPU keeps them bf16).
+    collective payloads (TPU keeps them bf16). The trailing element is the
+    bf16-eq wire bytes of the *int8 part* of the payload — how much of the
+    line's traffic a quantized transport actually moved as s8 (scales and
+    other operands excluded), used by the serve act_transport comparison.
     """
     for op in COLLECTIVE_OPS:
         idx = s.find(op + "(")
@@ -236,18 +239,23 @@ def _collective_line_bytes(s: str
         result = s[eq + 3:idx]
         byts = 0
         byts_eq = 0.0
+        byts_eq_s8 = 0.0
         for m in _SHAPE_RE.finditer(result):
             b = _shape_bytes(m.group(1), m.group(2))
             byts += b
             byts_eq += b * (0.5 if m.group(1) == "f32" else 1.0)
+            if m.group(1) == "s8":
+                byts_eq_s8 += b
         g = _group_size(s)
         if op == "reduce-scatter":
             mul = g if g else 1
             byts *= mul
             byts_eq *= mul
+            byts_eq_s8 *= mul
         wire = _wire_bytes(op, byts, g)
         wire_eq = _wire_bytes(op, byts_eq, g)
-        return op, byts, int(byts_eq), int(wire), int(wire_eq)
+        wire_eq_s8 = _wire_bytes(op, byts_eq_s8, g)
+        return op, byts, int(byts_eq), int(wire), int(wire_eq), int(wire_eq_s8)
     return None
 
 
@@ -271,7 +279,7 @@ def hlo_collective_bytes(text: str) -> Dict[str, Any]:
 
     memo: Dict[str, Dict[str, Any]] = {}
     _KEYS = ("count", "bytes", "bytes_bf16eq", "wire_bytes",
-             "wire_bytes_bf16eq")
+             "wire_bytes_bf16eq", "wire_bytes_bf16eq_s8")
 
     def zero():
         return {op: {k: 0 for k in _KEYS} for op in COLLECTIVE_OPS}
@@ -285,12 +293,13 @@ def hlo_collective_bytes(text: str) -> Dict[str, Any]:
         for s in comps[name]:
             hit = _collective_line_bytes(s)
             if hit:
-                op, byts, byts_eq, wire, wire_eq = hit
+                op, byts, byts_eq, wire, wire_eq, wire_eq_s8 = hit
                 agg[op]["count"] += 1
                 agg[op]["bytes"] += byts
                 agg[op]["bytes_bf16eq"] += byts_eq
                 agg[op]["wire_bytes"] += wire
                 agg[op]["wire_bytes_bf16eq"] += wire_eq
+                agg[op]["wire_bytes_bf16eq_s8"] += wire_eq_s8
             wm = _WHILE_RE.search(s)
             if wm:
                 cond, body = wm.group(1), wm.group(2)
@@ -312,7 +321,8 @@ def hlo_collective_bytes(text: str) -> Dict[str, Any]:
         return agg
 
     agg = visit(entry)
-    for k in ("bytes", "bytes_bf16eq", "wire_bytes", "wire_bytes_bf16eq"):
+    for k in ("bytes", "bytes_bf16eq", "wire_bytes", "wire_bytes_bf16eq",
+              "wire_bytes_bf16eq_s8"):
         agg["total_" + k] = sum(v[k] for v in agg.values()
                                 if isinstance(v, dict))
     return agg

@@ -90,13 +90,20 @@ model_flops = analysis.model_flops
 # stages, against 2 bf16 bytes on each of the two ring phases.
 INT8_EF_WIRE_RATIO = (1 + 4 / 256) / 2
 
+# Parsed serve-cell collectives, keyed by the full cell variant + act
+# transport: in an --act-transport both sweep each program is the sibling
+# cell's counterpart, so memoizing here means every distinct serve program
+# compiles exactly once per process instead of twice.
+_SERVE_COLL_MEMO: Dict[tuple, Dict[str, Any]] = {}
+
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                skip_compile: bool = False, preset: str = "baseline",
                microbatches: Optional[int] = None,
                remat_block: Optional[int] = None,
                capacity_factor: Optional[float] = None,
-               grad_transport: str = "bf16") -> Dict[str, Any]:
+               grad_transport: str = "bf16",
+               act_transport: str = "bf16") -> Dict[str, Any]:
     import dataclasses as _dc
     cfg = get_config(arch)
     if remat_block is not None:
@@ -107,11 +114,13 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     if microbatches is not None and shape.kind == "train":
         shape = _dc.replace(shape, microbatches=microbatches)
     rules = shd.PRESETS[preset]
+    is_train = shape.kind == "train"
     rec: Dict[str, Any] = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "kind": shape.kind, "preset": preset,
-        "grad_transport": grad_transport if shape.kind == "train" else None,
+        "grad_transport": grad_transport if is_train else None,
+        "act_transport": None if is_train else act_transport,
         "microbatches": shape.microbatches,
         "remat_block": cfg.remat_block,
         "capacity_factor": cfg.capacity_factor,
@@ -136,9 +145,11 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         batch_sds[k].shape, b_axes[k], mesh, rules)) for k in batch_sds}
 
     fn, kind = step_lib.step_for_shape(cfg, shape,
-                                       grad_transport=grad_transport)
+                                       grad_transport=grad_transport,
+                                       act_transport=act_transport)
     ctx = shd.axis_rules(mesh, rules)
     t0 = time.time()
+    jit_serve = None
     if kind == "train":
         ef = grad_transport == "int8_ef"
         o_abs = opt_lib.abstract_state(p_abs, error_feedback=ef)
@@ -148,13 +159,18 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                       out_shardings=(p_shard, o_shard, None))
         lower_args = (p_abs, o_abs, batch_sds)
     elif kind in ("prefill", "encode"):
-        jfn = jax.jit(fn, in_shardings=(p_shard, b_shard))
+        def jit_serve(f):
+            return jax.jit(f, in_shardings=(p_shard, b_shard))
+        jfn = jit_serve(fn)
         lower_args = (p_abs, batch_sds)
     else:  # decode
         c_axes = transformer.cache_axes(cfg, shape.global_batch, shape.seq_len)
         c_shard = shd.tree_shardings(cache_sds, c_axes, mesh, rules)
-        jfn = jax.jit(fn, in_shardings=(p_shard, c_shard, b_shard),
-                      out_shardings=(None, c_shard))
+
+        def jit_serve(f):
+            return jax.jit(f, in_shardings=(p_shard, c_shard, b_shard),
+                           out_shardings=(None, c_shard))
+        jfn = jit_serve(fn)
         lower_args = (p_abs, cache_sds, batch_sds)
     with ctx:
         lowered = jfn.lower(*lower_args)
@@ -190,27 +206,54 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     # CPU backend's bf16->f32 dot promotion (TPU keeps these payloads bf16);
     # raw result-shape bytes stay in the record under coll["total_bytes"]
     coll_dev = float(coll["total_wire_bytes_bf16eq"])
-    # int8-vs-bf16 gradient-transport comparison: the gradient reduction is
-    # the all-reduce/reduce-scatter wire component; the int8_ef transport
-    # moves INT8_EF_WIRE_RATIO of its bf16 bytes (validated on a real
-    # 8-device mesh in tests/test_multidevice.py), everything else (weight
-    # all-gathers, MoE all-to-alls) is unchanged.
-    grad_wire = float(coll["all-reduce"]["wire_bytes_bf16eq"]
-                      + coll["reduce-scatter"]["wire_bytes_bf16eq"])
-    coll_dev_int8 = coll_dev - grad_wire * (1 - INT8_EF_WIRE_RATIO)
+    if kind == "train":
+        # int8-vs-bf16 gradient-transport comparison: the gradient reduction
+        # is the all-reduce/reduce-scatter wire component; the int8_ef
+        # transport moves INT8_EF_WIRE_RATIO of its bf16 bytes (validated on
+        # a real 8-device mesh in tests/test_multidevice.py), everything
+        # else (weight all-gathers, MoE all-to-alls) is unchanged.
+        grad_wire = float(coll["all-reduce"]["wire_bytes_bf16eq"]
+                          + coll["reduce-scatter"]["wire_bytes_bf16eq"])
+        coll_bf16_dev = coll_dev               # SPMD compile wires bf16
+        coll_int8_dev = coll_dev - grad_wire * (1 - INT8_EF_WIRE_RATIO)
+        coll_own_dev = coll_int8_dev if grad_transport == "int8_ef" \
+            else coll_bf16_dev
+    else:
+        # serve cells: the act_transport comparison is *measured*, not
+        # modeled — compile the counterpart transport too and parse its
+        # collectives (the activation all-gathers carry s8 + scales under
+        # int8; everything else is shared between the two programs).
+        cell = (arch, shape_name, multi_pod, preset, cfg.remat_block,
+                cfg.capacity_factor)
+        _SERVE_COLL_MEMO[cell + (act_transport,)] = coll
+        other = "int8" if act_transport == "bf16" else "bf16"
+        coll2 = _SERVE_COLL_MEMO.get(cell + (other,))
+        if coll2 is None:
+            fn2, _ = step_lib.step_for_shape(cfg, shape, act_transport=other)
+            t0 = time.time()
+            with ctx:
+                coll2 = parse_collectives(
+                    jit_serve(fn2).lower(*lower_args).compile().as_text())
+            rec["compile_other_transport_s"] = round(time.time() - t0, 2)
+            _SERVE_COLL_MEMO[cell + (other,)] = coll2
+        by_t = {act_transport: coll, other: coll2}
+        coll_bf16_dev = float(by_t["bf16"]["total_wire_bytes_bf16eq"])
+        coll_int8_dev = float(by_t["int8"]["total_wire_bytes_bf16eq"])
+        coll_own_dev = coll_dev
+        rec["act_gather_wire_bytes_bf16eq_s8"] = \
+            int(by_t["int8"]["total_wire_bytes_bf16eq_s8"])
     mf = model_flops(cfg, shape)
     terms = {
         "compute_s": flops_dev / PEAK_FLOPS,
         "memory_s": bytes_dev / HBM_BW,
-        "collective_s": (coll_dev_int8 if grad_transport == "int8_ef"
-                         and shape.kind == "train" else coll_dev) / ICI_BW,
+        "collective_s": coll_own_dev / ICI_BW,
     }
     dom = max(terms, key=terms.get)
     bound_s = terms[dom]
     rec["roofline"] = {
         **terms,
-        "collective_s_bf16": coll_dev / ICI_BW,
-        "collective_s_int8": coll_dev_int8 / ICI_BW,
+        "collective_s_bf16": coll_bf16_dev / ICI_BW,
+        "collective_s_int8": coll_int8_dev / ICI_BW,
         "dominant": dom,
         "model_flops": mf,
         "model_flops_per_device": mf / n_chips,
@@ -226,7 +269,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 def main() -> None:
     ap = argparse.ArgumentParser(description="multi-pod dry-run")
     ap.add_argument("--arch", default="all")
-    ap.add_argument("--shape", default="all")
+    ap.add_argument("--shape", default="all",
+                    help="comma list of shape names and/or kinds "
+                         "(train/prefill/decode) or 'all'")
     ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--force", action="store_true")
@@ -239,22 +284,32 @@ def main() -> None:
                     help="gradient transport for train cells; 'both' sweeps "
                          "the two and the records carry the collective_s "
                          "int8-vs-bf16 comparison either way")
+    ap.add_argument("--act-transport", default="bf16",
+                    choices=["bf16", "int8", "both"],
+                    help="activation transport for serve (prefill/decode) "
+                         "cells; every compiled serve record carries the "
+                         "*measured* collective_s bf16-vs-int8 comparison "
+                         "(both transports are compiled either way)")
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--remat-block", type=int, default=None)
     ap.add_argument("--capacity-factor", type=float, default=None)
     args = ap.parse_args()
 
     archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
-    shapes = list(shapes_lib.SHAPE_IDS) if args.shape == "all" \
-        else args.shape.split(",")
+    try:
+        shapes = shapes_lib.expand_shape_names(args.shape)
+    except KeyError as e:
+        ap.error(str(e))
     meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
     presets = sorted(shd.PRESETS) if args.preset == "all" \
         else args.preset.split(",")
     for p in presets:
         if p not in shd.PRESETS:
             ap.error(f"unknown preset {p!r}; known: {sorted(shd.PRESETS)}")
-    transports = ["bf16", "int8_ef"] if args.grad_transport == "both" \
+    grad_transports = ["bf16", "int8_ef"] if args.grad_transport == "both" \
         else [args.grad_transport]
+    act_transports = ["bf16", "int8"] if args.act_transport == "both" \
+        else [args.act_transport]
     os.makedirs(args.out, exist_ok=True)
 
     failures = 0
@@ -262,7 +317,9 @@ def main() -> None:
         for shape in shapes:
             for mp in meshes:
                 for preset in presets:
-                    for transport in transports:
+                    is_train = shapes_lib.SHAPES[shape].kind == "train"
+                    sweep = grad_transports if is_train else act_transports
+                    for transport in sweep:
                         failures += run_one(
                             args, arch, shape, mp, preset, transport)
     print(f"done; failures={failures}")
@@ -272,13 +329,11 @@ def main() -> None:
 def run_one(args, arch: str, shape: str, mp: bool, preset: str,
             transport: str) -> int:
     is_train = shapes_lib.SHAPES[shape].kind == "train"
-    if transport == "int8_ef" and not is_train:
-        return 0                       # transport only exists for train cells
     parts = []
     if preset != "baseline":
         parts.append(preset)
     if transport != "bf16":
-        parts.append(transport)
+        parts.append(transport if is_train else f"act_{transport}")
     if args.microbatches:
         parts.append(f"mb{args.microbatches}")
     if args.remat_block:
@@ -300,7 +355,8 @@ def run_one(args, arch: str, shape: str, mp: bool, preset: str,
                          microbatches=args.microbatches,
                          remat_block=args.remat_block,
                          capacity_factor=args.capacity_factor,
-                         grad_transport=transport)
+                         grad_transport=transport if is_train else "bf16",
+                         act_transport="bf16" if is_train else transport)
     except Exception as e:  # a failure here is a bug in the system
         rec = {"arch": arch, "shape": shape,
                "mesh": "2x16x16" if mp else "16x16",
@@ -313,7 +369,7 @@ def run_one(args, arch: str, shape: str, mp: bool, preset: str,
     if status == "ok":
         r = rec["roofline"]
         coll_cmp = ""
-        if is_train:
+        if "collective_s_bf16" in r:
             coll_cmp = (f"coll_bf16={r['collective_s_bf16']:.4f}s "
                         f"coll_int8={r['collective_s_int8']:.4f}s ")
         print(f"  ok: compile={rec['compile_s']}s "

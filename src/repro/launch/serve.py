@@ -1,64 +1,148 @@
-"""Serving launcher: batched prefill + decode with a KV cache.
+"""Serving launcher: mesh-placed batched prefill + decode with a sharded
+KV cache and a quantized activation-collective transport.
 
-``python -m repro.launch.serve --arch granite-3-8b --smoke`` runs a batched
-generation loop on CPU with the reduced config; the full configs lower on
-the production mesh via the dry-run. Continuous batching: requests at
-different positions share one decode step (ragged lengths are masked —
-same semantics the decode_attn Pallas kernel implements on TPU).
+``python -m repro.launch.serve --arch paper-lm-100m --smoke`` runs a
+batched generation loop with the reduced config on a local mesh built over
+whatever devices exist (1 CPU device degrades to a (1, 1) mesh; the CI
+multidevice job forces 8 host devices and gets a real (data, model) mesh).
+Params, KV cache, and batch are explicitly placed: the ``serve_sp`` preset
+shards the cache over data (batch dim) x model (sequence dim) and the
+residual stream over sequence, and ``--act-transport int8`` runs the
+sequence-parallel activation all-gathers as blockwise-int8 chunks + scales
+(``repro.dist.collectives.act_gather``). Full configs lower on the
+production mesh via the dry-run (``repro.launch.dryrun --shape decode``).
+
+Continuous batching: requests at different positions share one decode step
+(``prompt_lens`` gives per-row lengths; positions/masks are per-row, so
+padded prompt slots are never attended — same semantics the decode_attn
+Pallas kernel implements on TPU).
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.configs.shapes import ShapeSpec
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_local_mesh
 from repro.models import transformer
 from repro.train import step as step_lib
 
 
-def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
-             temperature: float = 0.0, seed: int = 0):
-    """prompts: (B, S0) int32. Greedy (or sampled) decode of max_new tokens."""
-    b, s0 = prompts.shape
-    total = s0 + max_new
-    prefill = jax.jit(step_lib.make_prefill_step(cfg))
-    decode = jax.jit(step_lib.make_decode_step(cfg, total))
+def grow_cache(cache, target):
+    """Grow every cache leaf to the decode-horizon shape (end-padding).
 
-    logits, cache = prefill(params, {"tokens": jnp.asarray(prompts)})
-    # grow every cache leaf to the decode-horizon shape (end-padding); the
-    # target comes from the abstract decode cache, so windowed/SSM/xLSTM
-    # states are handled uniformly
-    target = transformer.abstract_cache(cfg, b, total)
-
+    ``target`` is the abstract decode cache, so windowed/SSM/xLSTM states
+    are handled uniformly: leaves already at the target shape only cast,
+    anything smaller pads with zeros at the end of each dimension (new
+    slots read as empty and are masked by slot-position validity until
+    written).
+    """
     def grow(c, tgt):
         if c.shape == tgt.shape:
             return c.astype(tgt.dtype)
         pad = [(0, t - s) for s, t in zip(c.shape, tgt.shape)]
         return jnp.pad(c, pad).astype(tgt.dtype)
 
-    cache = jax.tree.map(grow, cache, target)
+    return jax.tree.map(grow, cache, target)
 
-    key = jax.random.PRNGKey(seed)
-    out_tokens = []
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    for i in range(max_new):
-        out_tokens.append(np.asarray(tok))
-        logits, cache = decode(params, cache,
-                               {"tokens": tok,
-                                "pos": jnp.asarray(s0 + i, jnp.int32)})
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits / temperature
-                                         ).astype(jnp.int32)[:, None]
+
+def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
+             temperature: float = 0.0, seed: int = 0,
+             prompt_lens: Optional[np.ndarray] = None,
+             mesh=None, rules=None, act_transport: str = "bf16"):
+    """prompts: (B, S0) int32, right-padded when ragged. Greedy (or
+    sampled) decode of ``max_new`` tokens per row.
+
+    ``prompt_lens`` (B,) enables ragged continuous batching: row i's real
+    prompt is ``prompts[i, :prompt_lens[i]]``; every row decodes from its
+    own position and pad slots are masked (each row's output matches a
+    solo run of its unpadded prompt). ``mesh`` places params/cache/batch
+    explicitly (``rules`` defaults to the ``serve_sp`` preset);
+    ``act_transport`` picks the activation all-gather wire format.
+    """
+    b, s0 = prompts.shape
+    total = s0 + max_new
+    ragged = prompt_lens is not None
+    lens = np.asarray(prompt_lens, np.int32) if ragged else None
+    if ragged:
+        assert lens.shape == (b,) and (lens >= 1).all() and (lens <= s0).all()
+        # Ragged masking is only sound for full (slot == position) caches:
+        # ring buffers alias a padded position's junk slot to an in-window
+        # position before the row overwrites it, and SSM/xLSTM recurrent
+        # states scan pad tokens in during prefill — per-row masks cannot
+        # undo either. Refuse loudly rather than drift from solo runs.
+        if cfg.attn_window or cfg.family in ("hybrid", "ssm_xlstm"):
+            raise NotImplementedError(
+                f"ragged prompt_lens is unsupported for {cfg.name}: "
+                "windowed (ring-buffer) and recurrent-state families need "
+                "per-row prefill masking; pad to a uniform length instead")
+
+    if mesh is not None and rules is None:
+        rules = shd.PRESETS["serve_sp"]
+    ctx = shd.axis_rules(mesh, rules) if mesh is not None \
+        else contextlib.nullcontext()
+
+    prefill_fn = step_lib.make_prefill_step(cfg, act_transport)
+    decode_fn = step_lib.make_decode_step(cfg, total, act_transport)
+
+    with ctx:
+        c_shard = None
+        if mesh is not None:
+            p_shard = shd.tree_shardings(transformer.abstract_params(cfg),
+                                         transformer.param_axes(cfg),
+                                         mesh, rules)
+            params = jax.device_put(params, p_shard)
+            c_abs = transformer.abstract_cache(cfg, b, total)
+            c_axes = transformer.cache_axes(cfg, b, total)
+            c_shard = shd.tree_shardings(c_abs, c_axes, mesh, rules)
+            prefill = jax.jit(prefill_fn)
+            decode = jax.jit(decode_fn, out_shardings=(None, c_shard))
         else:
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            prefill = jax.jit(prefill_fn)
+            decode = jax.jit(decode_fn)
+
+        pre_batch = {"tokens": jnp.asarray(prompts)}
+        if ragged:
+            pre_batch["last_pos"] = jnp.asarray(lens - 1)
+        logits, cache = prefill(params, pre_batch)
+        cache = grow_cache(cache, transformer.abstract_cache(cfg, b, total))
+        if c_shard is not None:
+            # commit the grown cache to its serve_sp placement; decode's
+            # out_shardings keep it resident there across the loop
+            cache = jax.device_put(cache, c_shard)
+
+        key = jax.random.PRNGKey(seed)
+        out_tokens = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        for i in range(max_new):
+            out_tokens.append(np.asarray(tok))
+            pos = jnp.asarray(lens + i) if ragged \
+                else jnp.asarray(s0 + i, jnp.int32)
+            logits, cache = decode(params, cache, {"tokens": tok, "pos": pos})
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits / temperature
+                                             ).astype(jnp.int32)[:, None]
+            else:
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
     return np.concatenate(out_tokens, axis=1)
+
+
+def _pick_tp(n_devices: int, cfg) -> int:
+    """Largest model-parallel degree (<= 2) the device count and head
+    counts admit — the smoke default; override with --tp."""
+    for tp in (2, 1):
+        if n_devices % tp == 0 and cfg.n_heads % tp == 0:
+            return tp
+    return 1
 
 
 def main() -> None:
@@ -68,22 +152,45 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--tp", type=int, default=0,
+                    help="model-parallel degree (0 = auto)")
+    ap.add_argument("--preset", default="serve_sp",
+                    choices=sorted(shd.PRESETS))
+    ap.add_argument("--act-transport", default="bf16",
+                    choices=list(step_lib.ACT_TRANSPORTS))
+    ap.add_argument("--ragged", action="store_true",
+                    help="serve a mixed-length batch (continuous batching)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if not cfg.supports_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; no decode serving")
+    tp = args.tp or _pick_tp(jax.device_count(), cfg)
+    mesh = make_local_mesh(model_parallel=tp)
+    rules = shd.PRESETS[args.preset]
+
     key = jax.random.PRNGKey(0)
     params = transformer.init_params(cfg, key)
-    prompts = np.random.RandomState(0).randint(
-        0, cfg.vocab, size=(args.batch, args.prompt_len)).astype(np.int32)
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(0, cfg.vocab,
+                          size=(args.batch, args.prompt_len)).astype(np.int32)
+    lens = None
+    if args.ragged:
+        lens = rng.randint(max(1, args.prompt_len // 2), args.prompt_len + 1,
+                           size=(args.batch,)).astype(np.int32)
 
     t0 = time.time()
-    out = generate(cfg, params, prompts, max_new=args.max_new)
+    out = generate(cfg, params, prompts, max_new=args.max_new,
+                   temperature=args.temperature, prompt_lens=lens,
+                   mesh=mesh, rules=rules, act_transport=args.act_transport)
     dt = time.time() - t0
     n_tok = out.size
     print(f"[serve] arch={cfg.name} batch={args.batch} "
-          f"prompt={args.prompt_len} new={args.max_new}")
+          f"prompt={args.prompt_len} new={args.max_new} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"preset={args.preset} act_transport={args.act_transport}"
+          + (f" lens={lens.tolist()}" if lens is not None else ""))
     print(f"[serve] generated {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s incl. compile)")
     print("[serve] sample:", out[0][:10])

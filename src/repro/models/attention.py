@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ModelConfig
+from repro.dist import collectives
 from repro.dist.sharding import constrain, mesh_axis_size
 from repro.models import common
 from repro.models.common import Spec, blockwise_attention, decode_attention, apply_rope
@@ -35,20 +36,33 @@ def cache_slot_positions(cache_len_total: int, size: int, pos) -> jnp.ndarray:
     For a full cache (size >= max seq) slot i holds position i (valid iff
     i <= pos). For a ring buffer of ``size`` slots, slot i holds the largest
     p <= pos with p % size == i (valid iff p >= 0); assumes contiguous fill.
+    ``pos`` may be a scalar (returns (S,)) or per-row (B,) (returns (B,S) —
+    continuous batching, every request at its own position).
     """
     idx = jnp.arange(size, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)[..., None]     # () -> (1,), (B,) -> (B,1)
     if cache_len_total <= size:  # full cache
-        return jnp.where(idx <= pos, idx, -1)
+        return jnp.where(idx <= pos, idx, -1)        # (S,) or (B,S)
     p = pos - ((pos - idx) % size)
     return jnp.where(p >= 0, p, -1)
 
 
 def ring_update(buf: jnp.ndarray, new: jnp.ndarray, pos) -> jnp.ndarray:
-    """Write ``new`` (B, 1, ...) at slot pos % size of ``buf`` (B, size, ...)."""
+    """Write ``new`` (B, 1, ...) at slot pos % size of ``buf`` (B, size, ...).
+
+    ``pos`` scalar writes one slot for the whole batch; per-row (B,) writes
+    each row at its own slot (ragged continuous batching).
+    """
     size = buf.shape[1]
-    slot = jax.lax.rem(jnp.asarray(pos, jnp.int32), size)
-    start = (jnp.zeros((), jnp.int32), slot) + (jnp.zeros((), jnp.int32),) * (buf.ndim - 2)
-    return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), start)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        start = (jnp.zeros((), jnp.int32), jax.lax.rem(pos, size)) \
+            + (jnp.zeros((), jnp.int32),) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), start)
+    slot = jax.lax.rem(pos, size)                            # (B,)
+    hit = jnp.arange(size, dtype=jnp.int32)[None, :] == slot[:, None]
+    hit = hit.reshape(hit.shape + (1,) * (buf.ndim - 2))
+    return jnp.where(hit, new.astype(buf.dtype), buf)
 
 
 # ---------------------------------------------------------------------------
@@ -84,16 +98,28 @@ def gqa_apply(cfg: ModelConfig, p, x: jnp.ndarray, mode: str,
     v = constrain(v, "batch", None, "kv_heads", None)
 
     if mode == "decode":
-        q = apply_rope(q, jnp.full((b, 1), pos, jnp.int32), cfg.rope_theta)
-        k = apply_rope(k, jnp.full((b, 1), pos, jnp.int32), cfg.rope_theta)
+        pos_bt = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[..., None],
+                                  (b, 1))            # scalar or per-row (B,)
+        q = apply_rope(q, pos_bt, cfg.rope_theta)
+        k = apply_rope(k, pos_bt, cfg.rope_theta)
         size = cache["k"].shape[1]
         cache_sp = ("batch", "kv_seq", "kv_heads", None)
         k_cache = constrain(ring_update(cache["k"], k, pos), *cache_sp)
         v_cache = constrain(ring_update(cache["v"], v, pos), *cache_sp)
         kpos = cache_slot_positions(cache_len_total + 1, size, pos)
         if cfg.attn_window:
-            kpos = jnp.where(kpos > pos - cfg.attn_window, kpos, -1)
-        out = decode_attention(q, k_cache, v_cache, kpos, pos)
+            win_lo = jnp.asarray(pos, jnp.int32)[..., None] - cfg.attn_window
+            kpos = jnp.where(kpos > win_lo, kpos, -1)
+        # serve_sp: the cache is sequence-sharded; attention needs every
+        # slot, so this is decode's activation all-gather (s8 under
+        # act_transport="int8"). Gather to a head-replicated layout — a
+        # pure all-gather over the sequence shards; the scores einsum then
+        # slices heads locally against the head-sharded q. The *stored*
+        # cache stays seq-sharded and unquantized — only the gathered
+        # attention operand is compressed.
+        k_att = collectives.act_gather(k_cache, "batch", None, None, None)
+        v_att = collectives.act_gather(v_cache, "batch", None, None, None)
+        out = decode_attention(q, k_att, v_att, kpos, pos)
         new_cache = {"k": k_cache, "v": v_cache}
     else:
         positions = jnp.arange(s, dtype=jnp.int32)[None, :]
@@ -173,14 +199,20 @@ def _mla_expand(cfg, p, latent, k_rope):
 def mla_apply(cfg: ModelConfig, p, x, mode, cache, pos, cache_len_total):
     b, s, _ = x.shape
     if mode == "decode":
-        positions = jnp.full((b, 1), pos, jnp.int32)
+        positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[..., None],
+                                     (b, 1))
         q, latent, k_rope = _mla_qk(cfg, p, x, positions)
         lat_cache = constrain(ring_update(cache["latent"], latent, pos),
                               "batch", "kv_seq", None)
         kr_cache = constrain(ring_update(cache["k_rope"],
                                          k_rope[:, :, None, :], pos),
                              "batch", "kv_seq", None, None)
-        k, v = _mla_expand(cfg, p, lat_cache, kr_cache[..., 0, :])
+        # decode's activation all-gather (MLA form): the latent cache is
+        # the compressed KV state — gather it (s8 under int8 transport)
+        # before the per-head expansion.
+        lat_att = collectives.act_gather(lat_cache, "batch", None, None)
+        kr_att = collectives.act_gather(kr_cache, "batch", None, None, None)
+        k, v = _mla_expand(cfg, p, lat_att, kr_att[..., 0, :])
         kpos = cache_slot_positions(cache_len_total + 1, lat_cache.shape[1], pos)
         out = decode_attention(q, k, v, kpos, pos)
         new_cache = {"latent": lat_cache, "k_rope": kr_cache}

@@ -205,7 +205,10 @@ def blockwise_attention(q, k, v, *, causal=True, window=0,
 def decode_attention(q, k_cache, v_cache, k_positions, pos):
     """Single-token attention against a cache. q:(B,1,H,D), caches (B,S,Hkv,D).
 
-    ``k_positions``: (S,) absolute slot positions (-1 invalid); ``pos`` scalar.
+    ``k_positions``: (S,) or per-row (B,S) absolute slot positions (-1
+    invalid); ``pos``: scalar or per-row (B,) current position. Per-row
+    forms are the continuous-batching case — every request sits at its own
+    position and padded/stale slots are masked row-wise.
     """
     b, _, h, d = q.shape
     hkv = k_cache.shape[2]
@@ -214,8 +217,13 @@ def decode_attention(q, k_cache, v_cache, k_positions, pos):
     scale = 1.0 / np.sqrt(d)
     qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
     s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32)) * scale
-    valid = (k_positions >= 0) & (k_positions <= pos)
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    kp = jnp.asarray(k_positions, jnp.int32)
+    if kp.ndim == 1:
+        kp = kp[None, :]
+    valid = (kp >= 0) & (kp <= pos_b[:, None])          # (B or 1, S) -> (B,S)
+    valid = jnp.broadcast_to(valid, (b, k_cache.shape[1]))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     s = constrain(s, "batch", "kv_heads", None, "kv_seq")
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))

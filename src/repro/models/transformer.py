@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ModelConfig
+from repro.dist.collectives import act_gather
 from repro.dist.sharding import constrain
 from repro.models import attention, moe, ssm, xlstm
 from repro.models.common import (
@@ -146,10 +147,16 @@ def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
 def _layer_body(cfg: ModelConfig, mode: str, cache_len_total: int,
                 x, lp, lcache, pos):
     aux = {}
-    # residual stream anchor; under the "sp" preset seq_res -> model shards
-    # the saved remat activations 16x (Megatron sequence parallelism)
+    # residual stream anchor; under the "sp"/"serve_sp" presets seq_res ->
+    # model shards the residual stream (Megatron sequence parallelism)
     x = constrain(x, "batch", "seq_res", "act_embed")
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if mode != "decode":
+        # the sp activation all-gather: attention needs the full sequence,
+        # so the post-norm stream reshards seq-sharded -> gathered here
+        # (int8 on the wire under act_transport="int8"). Decode's gather
+        # is the KV-cache gather inside the attention layer instead.
+        h = act_gather(h, "batch", None, "act_embed")
     attn_cache = None
     if lcache is not None and cfg.family != "hybrid":
         attn_cache = lcache
@@ -170,6 +177,8 @@ def _layer_body(cfg: ModelConfig, mode: str, cache_len_total: int,
     else:
         x = x + attn_out
     h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if mode != "decode":
+        h2 = act_gather(h2, "batch", None, "act_embed")   # sp gather, MLP side
     if cfg.family == "moe":
         y, aux = moe.moe_apply(cfg, lp["moe"], h2)
     elif cfg.d_ff > 0:
@@ -319,8 +328,13 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, Any], mode: str,
         return _logits(cfg, params, x), None
 
     if mode == "prefill":
-        logits = _logits(cfg, params, x[:, -1])
-        return logits, new_cache
+        last = batch.get("last_pos")
+        if last is None:
+            xl = x[:, -1]
+        else:   # ragged prompts: per-row index of the final prompt token
+            idx = jnp.asarray(last, jnp.int32)[:, None, None]
+            xl = jnp.take_along_axis(x, idx, axis=1)[:, 0]
+        return _logits(cfg, params, xl), new_cache
 
     # decode
     logits = _logits(cfg, params, x[:, -1])

@@ -18,6 +18,7 @@ from repro.models import transformer
 from repro.train import optimizer as opt_lib
 
 GRAD_TRANSPORTS = ("bf16", "int8_ef")
+ACT_TRANSPORTS = collectives.ACT_TRANSPORTS   # serve steps: ("bf16", "int8")
 
 
 def make_loss_fn(cfg: ModelConfig):
@@ -165,33 +166,73 @@ def _data_parallel_step(grads_and_metrics, adamw, mesh, data_axis,
                      check_rep=False)
 
 
-def make_encode_step(cfg: ModelConfig):
+def _check_act_transport(act_transport: Optional[str]) -> None:
+    if act_transport is not None and act_transport not in ACT_TRANSPORTS:
+        raise ValueError(f"unknown act_transport {act_transport!r}; "
+                         f"expected one of {ACT_TRANSPORTS}")
+
+
+def make_encode_step(cfg: ModelConfig, act_transport: Optional[str] = "bf16"):
     """Encoder-only serving: full-sequence unit logits (HuBERT-style)."""
+    _check_act_transport(act_transport)
+
     def encode_step(params, batch):
-        logits, _ = transformer.forward(cfg, params, batch, "encode")
+        with collectives.act_transport_scope(act_transport):
+            logits, _ = transformer.forward(cfg, params, batch, "encode")
         return logits
     return encode_step
 
 
-def make_prefill_step(cfg: ModelConfig):
+def make_prefill_step(cfg: ModelConfig, act_transport: Optional[str] = "bf16"):
+    """Returns prefill_step(params, batch) -> (last-position logits, cache).
+
+    ``batch`` may carry ``"last_pos"`` (per-row index of the final prompt
+    token) for ragged continuous batching; without it the logits come from
+    the last sequence position of every row.
+
+    ``act_transport`` picks how the sequence-parallel activation all-gather
+    (the ``sp``/``serve_sp`` residual-stream gather before attention and
+    the MLP) crosses the wire: ``"bf16"`` reshards the raw payload,
+    ``"int8"`` moves blockwise-int8 chunks + scales
+    (``collectives.all_gather_int8``). No error feedback: activations are
+    stateless across steps, so per-step quantization error never compounds.
+    ``None`` disables the serve gather boundary entirely (legacy layout).
+    """
+    _check_act_transport(act_transport)
+
     def prefill_step(params, batch):
-        logits, cache = transformer.forward(cfg, params, batch, "prefill")
+        with collectives.act_transport_scope(act_transport):
+            logits, cache = transformer.forward(cfg, params, batch, "prefill")
         return logits, cache
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, cache_len_total: int):
+def make_decode_step(cfg: ModelConfig, cache_len_total: int,
+                     act_transport: Optional[str] = "bf16"):
+    """Returns decode_step(params, cache, batch) -> (logits, new_cache).
+
+    ``batch["pos"]`` is a scalar position or a per-row ``(B,)`` vector
+    (ragged continuous batching). Under the ``serve_sp`` preset the KV
+    cache is sharded over data (batch) x model (sequence); decode's
+    activation all-gather is the cache gather feeding single-token
+    attention, and ``act_transport="int8"`` runs it as blockwise-int8
+    chunks + scales (see :func:`make_prefill_step`).
+    """
+    _check_act_transport(act_transport)
+
     def decode_step(params, cache, batch):
-        logits, new_cache = transformer.forward(
-            cfg, params, batch, "decode", cache=cache,
-            cache_len_total=cache_len_total)
+        with collectives.act_transport_scope(act_transport):
+            logits, new_cache = transformer.forward(
+                cfg, params, batch, "decode", cache=cache,
+                cache_len_total=cache_len_total)
         return logits, new_cache
     return decode_step
 
 
 def step_for_shape(cfg: ModelConfig, shape: ShapeSpec,
                    adamw: Optional[opt_lib.AdamWConfig] = None,
-                   grad_transport: str = "bf16"):
+                   grad_transport: str = "bf16",
+                   act_transport: str = "bf16"):
     """The function the dry-run lowers for a given cell, plus its kind."""
     if shape.kind == "train":
         return make_train_step(cfg, adamw or opt_lib.AdamWConfig(),
@@ -199,6 +240,6 @@ def step_for_shape(cfg: ModelConfig, shape: ShapeSpec,
                                grad_transport=grad_transport), "train"
     if shape.kind == "prefill":
         if not cfg.supports_decode:      # encoder: no cache semantics
-            return make_encode_step(cfg), "encode"
-        return make_prefill_step(cfg), "prefill"
-    return make_decode_step(cfg, shape.seq_len), "decode"
+            return make_encode_step(cfg, act_transport), "encode"
+        return make_prefill_step(cfg, act_transport), "prefill"
+    return make_decode_step(cfg, shape.seq_len, act_transport), "decode"

@@ -1,0 +1,143 @@
+"""The CI bench-trajectory gate (scripts/bench_diff.py): synthetic
+trajectories prove the bench-smoke job fails on an injected >=15%
+collective_s (or roofline_fraction) regression, passes within tolerance,
+and tolerates a missing baseline on the first run."""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_diff",
+    os.path.join(os.path.dirname(__file__), "..", "scripts", "bench_diff.py"))
+bench_diff = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_diff)
+
+
+def _rec(arch="paper-lm-100m", shape="train_4k", mesh="16x16",
+         preset="baseline", grad_transport="bf16", act_transport=None,
+         collective_s=0.1, roofline_fraction=0.5, status="ok",
+         microbatches=8, remat_block=1, capacity_factor=1.25):
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "preset": preset,
+        "grad_transport": grad_transport, "act_transport": act_transport,
+        "microbatches": microbatches, "remat_block": remat_block,
+        "capacity_factor": capacity_factor,
+        "status": status,
+        "roofline": {"collective_s": collective_s,
+                     "roofline_fraction": roofline_fraction},
+    }
+
+
+def _traj(path, records):
+    with open(path, "w") as f:
+        json.dump({"cells": len(records), "rows": [], "records": records}, f)
+    return str(path)
+
+
+class TestDiffTrajectories:
+    def test_no_regression_within_threshold(self):
+        base = [_rec(collective_s=0.100), _rec(shape="decode_32k",
+                                               collective_s=0.060)]
+        cur = [_rec(collective_s=0.110),   # +10% < 15%: fine
+               _rec(shape="decode_32k", collective_s=0.055)]  # improvement
+        res = bench_diff.diff_trajectories(cur, base, threshold=0.15)
+        assert res["compared"] == 2
+        assert res["regressions"] == []
+
+    def test_collective_s_regression_fails(self):
+        base = [_rec(collective_s=0.100)]
+        cur = [_rec(collective_s=0.120)]   # +20% > 15%
+        res = bench_diff.diff_trajectories(cur, base, threshold=0.15)
+        assert len(res["regressions"]) == 1
+        r = res["regressions"][0]
+        assert r["metric"] == "collective_s"
+        assert r["change"] == pytest.approx(0.20, abs=1e-6)
+
+    def test_roofline_fraction_drop_fails(self):
+        """Higher-is-better metric: a drop is the regression direction."""
+        base = [_rec(roofline_fraction=0.50)]
+        cur = [_rec(roofline_fraction=0.40)]   # -20%
+        res = bench_diff.diff_trajectories(cur, base)
+        assert [r["metric"] for r in res["regressions"]] \
+            == ["roofline_fraction"]
+        # and a roofline_fraction *gain* never trips the gate
+        res2 = bench_diff.diff_trajectories([_rec(roofline_fraction=0.9)],
+                                            base)
+        assert res2["regressions"] == []
+
+    def test_threshold_is_configurable(self):
+        base = [_rec(collective_s=0.100)]
+        cur = [_rec(collective_s=0.110)]
+        assert bench_diff.diff_trajectories(cur, base,
+                                            threshold=0.05)["regressions"]
+        assert not bench_diff.diff_trajectories(cur, base,
+                                                threshold=0.15)["regressions"]
+
+    def test_cells_matched_by_full_variant_key(self):
+        """An int8 serve cell never diffs against its bf16 sibling."""
+        base = [_rec(shape="decode_32k", grad_transport=None,
+                     act_transport="bf16", collective_s=0.060)]
+        cur = [_rec(shape="decode_32k", grad_transport=None,
+                    act_transport="int8", collective_s=0.090)]
+        res = bench_diff.diff_trajectories(cur, base)
+        assert res["compared"] == 0
+        assert res["regressions"] == []
+        assert len(res["only_current"]) == 1
+
+    def test_hyperparameter_variants_never_collide(self):
+        """mb/rb/cf sweeps of the same cell are distinct gate keys — a
+        current mb4 cell must not diff against an mb8 baseline."""
+        base = [_rec(microbatches=8, collective_s=0.100)]
+        cur = [_rec(microbatches=4, collective_s=0.200)]
+        res = bench_diff.diff_trajectories(cur, base)
+        assert res["compared"] == 0 and res["regressions"] == []
+        assert bench_diff.cell_key(_rec(remat_block=2)) \
+            != bench_diff.cell_key(_rec(remat_block=1))
+        assert bench_diff.cell_key(_rec(capacity_factor=2.0)) \
+            != bench_diff.cell_key(_rec())
+
+    def test_non_ok_and_malformed_cells_are_ignored(self):
+        base = [_rec(collective_s=0.1),
+                _rec(shape="prefill_8k", status="skip")]
+        cur = [_rec(collective_s=0.1),
+               _rec(shape="prefill_8k", status="error"),
+               {"arch": "x", "status": "ok"}]      # no roofline dict
+        res = bench_diff.diff_trajectories(cur, base)
+        assert res["compared"] == 1
+        assert res["regressions"] == []
+
+
+class TestMainGate:
+    def test_missing_baseline_tolerated(self, tmp_path):
+        cur = _traj(tmp_path / "cur.json", [_rec()])
+        assert bench_diff.main(["--current", cur,
+                                "--baseline",
+                                str(tmp_path / "nope.json")]) == 0
+
+    def test_unreadable_baseline_tolerated(self, tmp_path):
+        cur = _traj(tmp_path / "cur.json", [_rec()])
+        bad = tmp_path / "bad.json"
+        bad.write_text("not json{")
+        assert bench_diff.main(["--current", cur,
+                                "--baseline", str(bad)]) == 0
+
+    def test_missing_current_fails(self, tmp_path):
+        base = _traj(tmp_path / "base.json", [_rec()])
+        assert bench_diff.main(["--current", str(tmp_path / "nope.json"),
+                                "--baseline", base]) == 1
+
+    def test_regression_exits_nonzero(self, tmp_path):
+        base = _traj(tmp_path / "base.json", [_rec(collective_s=0.100)])
+        cur = _traj(tmp_path / "cur.json", [_rec(collective_s=0.130)])
+        assert bench_diff.main(["--current", cur, "--baseline", base]) == 1
+
+    def test_green_trajectory_passes(self, tmp_path):
+        recs = [_rec(collective_s=0.100, roofline_fraction=0.5),
+                _rec(shape="decode_32k", grad_transport=None,
+                     act_transport="int8", collective_s=0.031)]
+        base = _traj(tmp_path / "base.json", recs)
+        cur = _traj(tmp_path / "cur.json", json.loads(json.dumps(recs)))
+        assert bench_diff.main(["--current", cur, "--baseline", base]) == 0
