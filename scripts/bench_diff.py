@@ -30,6 +30,19 @@ from typing import Any, Dict, List, Optional, Tuple
 METRICS: Dict[str, str] = {
     "collective_s": "lower",
     "roofline_fraction": "higher",
+    # disaggregated-decode design space (decode cells only; missing in
+    # either record => skipped, so pre-disagg baselines stay comparable).
+    # The per-batch transfer and per-token decode-step components are
+    # gated individually: the combo sum is transfer-dominated, so a large
+    # decode-step regression would hide inside it.
+    "disagg_collective_s_bf16xbf16": "lower",
+    "disagg_collective_s_bf16xint8": "lower",
+    "disagg_collective_s_int8xbf16": "lower",
+    "disagg_collective_s_int8xint8": "lower",
+    "disagg_transfer_s_bf16": "lower",
+    "disagg_transfer_s_int8": "lower",
+    "disagg_decode_step_s_bf16": "lower",
+    "disagg_decode_step_s_int8": "lower",
 }
 
 DEFAULT_THRESHOLD = 0.15

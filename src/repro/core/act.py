@@ -66,17 +66,40 @@ class Scheduler:
         self.fail_fn = fail_fn
         self.interleave_fn = interleave_fn  # concurrent-writer injection
 
+    @staticmethod
+    def _tasks_for(cand: Candidate,
+                   table_tasks: List[CompactionTask]) -> List[CompactionTask]:
+        """Dispatch one table plan's bins to a candidate by partition."""
+        if cand.scope == Scope.PARTITION and cand.partition is not None:
+            return [t for t in table_tasks
+                    if (t.scope or "") == (cand.partition or "")]
+        return table_tasks
+
     def plan(self, cand: Candidate) -> List[CompactionTask]:
         scope = "partition" if cand.scope == Scope.PARTITION else "table"
         tasks = comp.plan_table(cand.table, self.target, scope=scope)
-        if cand.scope == Scope.PARTITION and cand.partition is not None:
-            tasks = [t for t in tasks
-                     if (t.scope or "") == (cand.partition or "")]
-        return tasks
+        return self._tasks_for(cand, tasks)
 
     def execute(self, selected: Sequence[Candidate]) -> ActReport:
         """Tables are independent units (parallelizable); within a table,
-        tasks run sequentially to avoid LST conflicts (§4.4/§6)."""
+        tasks run sequentially to avoid LST conflicts (§4.4/§6).
+
+        Planning is linear in the candidate count: each table is
+        bin-packed ONCE per ``execute`` call and the resulting bins are
+        dispatched to partition-scope candidates by partition (execution
+        never crosses partitions, so compacting one partition leaves every
+        other partition's bins valid). The old path re-ran
+        ``comp.plan_table`` over the whole table for every partition
+        candidate and filtered — O(P^2) bins planned for P partitions.
+        Before executing a candidate, its dispatched bins are checked
+        against CURRENT file liveness: if any bin references a file no
+        longer live — consumed by an earlier candidate in this call, or
+        deleted by a concurrent writer since planning — the table is
+        replanned instead of executing the stale bin (which would merge a
+        logically-deleted file's rows into the compacted output). The
+        common case (distinct partitions, no concurrent deletes) still
+        plans once: a liveness set-check per candidate, not a bin-pack.
+        """
         report = ActReport()
         if self.offpeak_window is not None and not self.offpeak_window():
             return report
@@ -84,8 +107,18 @@ class Scheduler:
         for c in selected:
             by_table.setdefault(c.table.table_id, []).append(c)
         for table_id in sorted(by_table):
+            table_tasks: Optional[List[CompactionTask]] = None
             for cand in by_table[table_id]:
-                tasks = self.plan(cand)
+                tasks: List[CompactionTask] = []
+                if table_tasks is not None:
+                    tasks = self._tasks_for(cand, table_tasks)
+                    live = {f.path for f in cand.table.current_files()}
+                    if any(f.path not in live
+                           for t in tasks for f in t.inputs):
+                        table_tasks = None      # stale plan: files died
+                if table_tasks is None:
+                    table_tasks = comp.plan_table(cand.table, self.target)
+                    tasks = self._tasks_for(cand, table_tasks)
                 if cand.scope != Scope.PARTITION:
                     # table scope: one commit for the whole rewrite job
                     res = comp.execute_tasks_atomic(
@@ -95,6 +128,7 @@ class Scheduler:
                         rewrite_bytes_per_hour=self.rewrite_bytes_per_hour,
                         interleave_fn=self.interleave_fn)
                     report.results.append(res)
+                    table_tasks = None   # table-scope rewrite: replan
                     continue
                 for task in tasks:      # partition scope: per-partition commit
                     res = comp.execute_task(

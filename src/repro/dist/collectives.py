@@ -144,6 +144,20 @@ def compressed_psum(x: jnp.ndarray, axis_name: Optional[str] = None,
 ACT_TRANSPORTS = ("bf16", "int8")
 ACT_BLOCK = 256
 
+# Disaggregated serving knobs (see "Disaggregated serving" in dist/README.md):
+# the prefill->decode cache handoff wire format, and the decode-resident
+# cache storage dtype. Orthogonal axes — 4 combinations.
+CACHE_TRANSFERS = ("bf16", "int8")
+KV_STORAGES = ("bf16", "int8")
+
+
+def lastdim_blocks(d: int, block: int = ACT_BLOCK) -> Tuple[int, int]:
+    """(block_size, n_blocks) the lastdim quantizer uses for a trailing dim
+    of ``d``: ``block`` when it divides ``d``, else one block spanning the
+    whole dim. Cache-layout code needs this to size scale leaves."""
+    b = block if d % block == 0 else d
+    return b, d // b
+
 
 def quantize_int8_lastdim(x: jnp.ndarray, block: int = ACT_BLOCK
                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -159,8 +173,8 @@ def quantize_int8_lastdim(x: jnp.ndarray, block: int = ACT_BLOCK
     ``scales: float32`` of ``x.shape[:-1] + (n_blocks,)``.
     """
     d = x.shape[-1]
-    b = block if d % block == 0 else d
-    blocks = x.astype(jnp.float32).reshape(x.shape[:-1] + (d // b, b))
+    b, nb = lastdim_blocks(d, block)
+    blocks = x.astype(jnp.float32).reshape(x.shape[:-1] + (nb, b))
     q, scales = _quantize_blocks(blocks)
     return q.reshape(x.shape), scales
 
@@ -174,40 +188,105 @@ def dequantize_int8_lastdim(q: jnp.ndarray, scales: jnp.ndarray
     return _dequantize_blocks(blocks, scales).reshape(q.shape)
 
 
-class _ActStack(threading.local):
-    def __init__(self):
+# ---------------------------------------------------------------------------
+# disaggregated serving: prefill->decode cache stream + storage quantization
+# ---------------------------------------------------------------------------
+
+def quantize_int8_seqaxis(x: jnp.ndarray, seq_axis: int,
+                          block: int = ACT_BLOCK
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise int8 along the *sequence* axis of a cache leaf.
+
+    The cache-stream wire format: the leaf is viewed with its sequence axis
+    trailing and quantized with :func:`quantize_int8_lastdim`, so each block
+    groups ``block`` consecutive positions of one feature channel — the
+    natural chunking for a cache handed off as a stream, and (when ``block``
+    divides the per-shard sequence length) local under the prefill side's
+    sequence sharding. Returns ``(q, scales)`` in the seq-last layout; pair
+    with :func:`dequantize_int8_seqaxis` on the receiving mesh.
+    """
+    return quantize_int8_lastdim(jnp.moveaxis(x, seq_axis, -1), block)
+
+
+def dequantize_int8_seqaxis(q: jnp.ndarray, scales: jnp.ndarray,
+                            seq_axis: int) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int8_seqaxis`: dequantize and move the
+    sequence axis back to its cache position (float32 out)."""
+    return jnp.moveaxis(dequantize_int8_lastdim(q, scales), -1, seq_axis)
+
+
+def stream_int8(x: jnp.ndarray, *logical_axes: Optional[str],
+                seq_axis: int, block: int = ACT_BLOCK) -> jnp.ndarray:
+    """Reshard a cache leaf to the layout named by ``logical_axes`` moving
+    seq-blockwise int8 chunks + f32 scales on the wire — the single-mesh
+    form of the prefill->decode cache stream (the dryrun compiles this to
+    measure transfer wire bytes; the two-mesh launcher runs the same
+    quantize/dequantize pair around a ``device_put``).
+
+    ``logical_axes`` names the *target* (decode-side) layout in the leaf's
+    own axis order; ``seq_axis`` is the sequence axis index. The quantized
+    arrays are constrained to the target layout so XLA's resharding
+    collective carries s8 instead of the raw payload.
+    """
+    axes = list(logical_axes)
+    axes.append(axes.pop(seq_axis))          # seq-last, matching q's layout
+    q, scales = quantize_int8_seqaxis(x, seq_axis, block)
+    q = _shd.constrain(q, *axes)
+    scales = _shd.constrain(scales, *axes[:-1], None)
+    return dequantize_int8_seqaxis(q, scales, seq_axis).astype(x.dtype)
+
+
+class _TraceScope(threading.local):
+    """Thread-local trace-time value stack — the shared machinery behind
+    the serve-path knobs (activation transport, KV storage). ``None``
+    pushed into a scope normalizes to the stack's default; reading an
+    empty stack returns the default too. Like ``sharding.axis_rules``
+    these scopes only affect tracing, so a jitted step keeps the values
+    it was traced with."""
+
+    def __init__(self, name: str, allowed: Tuple[str, ...],
+                 default: Optional[str] = None):
+        self.name = name
+        self.allowed = allowed
+        self.default = default
         self.items: list = []
 
+    def current(self) -> Optional[str]:
+        return self.items[-1] if self.items else self.default
 
-_act_ctx = _ActStack()
+
+class _trace_scope_ctx:
+    def __init__(self, stack: _TraceScope, mode: Optional[str]):
+        if mode is not None and mode not in stack.allowed:
+            raise ValueError(f"unknown {stack.name} {mode!r}; "
+                             f"expected one of {stack.allowed}")
+        self.stack = stack
+        self.mode = stack.default if mode is None else mode
+
+    def __enter__(self) -> "_trace_scope_ctx":
+        self.stack.items.append(self.mode)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.stack.items.pop()
+        return False
+
+
+_act_ctx = _TraceScope("act_transport", ACT_TRANSPORTS, None)
 
 
 def current_act_transport() -> Optional[str]:
     """Active serve activation transport, or None outside any scope."""
-    return _act_ctx.items[-1] if _act_ctx.items else None
+    return _act_ctx.current()
 
 
-class act_transport_scope:
+def act_transport_scope(mode: Optional[str]) -> _trace_scope_ctx:
     """Trace-time scope selecting how serve activation all-gathers cross
     the wire (``"bf16"`` — plain constrained reshard — or ``"int8"`` —
-    blockwise int8 chunks + scales). Entered by the prefill/decode step
-    factories; model code reads it through :func:`act_gather`. Like
-    ``sharding.axis_rules`` this only affects tracing, so a jitted step
-    keeps the transport it was traced with."""
-
-    def __init__(self, mode: Optional[str]):
-        if mode is not None and mode not in ACT_TRANSPORTS:
-            raise ValueError(f"unknown act_transport {mode!r}; "
-                             f"expected one of {ACT_TRANSPORTS}")
-        self.mode = mode
-
-    def __enter__(self) -> "act_transport_scope":
-        _act_ctx.items.append(self.mode)
-        return self
-
-    def __exit__(self, *exc) -> bool:
-        _act_ctx.items.pop()
-        return False
+    blockwise int8 chunks + scales; ``None`` disables the boundary).
+    Entered by the prefill/decode step factories; model code reads it
+    through :func:`act_gather`."""
+    return _trace_scope_ctx(_act_ctx, mode)
 
 
 def all_gather_int8(x: jnp.ndarray, *logical_axes: Optional[str],
@@ -217,11 +296,39 @@ def all_gather_int8(x: jnp.ndarray, *logical_axes: Optional[str],
     payload: quantize locally (blocks along the trailing axis never cross a
     shard of the leading axes), constrain the *quantized* arrays to the
     target layout so XLA's resharding all-gather carries s8, dequantize on
-    the gathered side. ~(1 + 4/block)/2 of the bf16 wire bytes."""
+    the gathered side. ~(1 + 4/block)/2 of the bf16 wire bytes.
+
+    An already-int8 payload (an int8-resident KV cache under
+    ``kv_storage="int8"``) passes through as a plain constrained reshard:
+    it is as small as this transport could make it, and re-quantizing s8
+    values through a fresh abs-max scale would just add rounding error."""
+    if x.dtype == jnp.int8:
+        return _shd.constrain(x, *logical_axes)
     q, scales = quantize_int8_lastdim(x, block)
     q = _shd.constrain(q, *logical_axes)
     scales = _shd.constrain(scales, *logical_axes[:-1], None)
     return dequantize_int8_lastdim(q, scales).astype(x.dtype)
+
+
+_kv_ctx = _TraceScope("kv_storage", KV_STORAGES, "bf16")
+
+
+def current_kv_storage() -> str:
+    """Active decode-cache storage dtype ("bf16" outside any scope)."""
+    return _kv_ctx.current()
+
+
+def kv_storage_scope(mode: Optional[str]) -> _trace_scope_ctx:
+    """Trace-time scope selecting the decode KV cache's *resident* dtype:
+    ``"bf16"`` (the default, full-precision leaves) or ``"int8"`` (each
+    leaf stored as blockwise-int8 values + f32 scales along the trailing
+    feature axis; written tokens quantize per-position on the way in and
+    attention dequantizes per-block at read time). Entered by
+    ``make_decode_step``; attention layers read it through
+    :func:`current_kv_storage`. Orthogonal to :func:`act_transport_scope`
+    (the storage dtype is what the cache *is*; the transport is how a
+    reshard crosses the wire)."""
+    return _trace_scope_ctx(_kv_ctx, mode)
 
 
 def act_gather(x: jnp.ndarray, *logical_axes: Optional[str]) -> jnp.ndarray:

@@ -78,6 +78,22 @@ _SERVE_SP_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
     for name, targets in _WEIGHT_RULES) \
     + (("seq_res", ("model",)), ("kv_seq", ("model",)))
 
+# Disaggregated decode: the batch-heavy layout for a dedicated decode mesh.
+# serve_sp minus the sequence shards — the KV cache stays fully resident
+# per batch shard ("kv_seq" unmapped, and the KV head/latent dims
+# deliberately unmapped too so the cache never picks up a model-axis shard
+# that would force a per-step regather), so single-token attention reads
+# it with ZERO per-step cache collectives; the only decode wire left is
+# the tiny tensor-parallel activation reduction behind the q/o
+# projections (which keep "heads" -> model). The tradeoff vs serve_sp is
+# cache HBM (replicated over model instead of sequence-sharded), which is
+# exactly what the kv_storage="int8" arm halves. Prefill never runs under
+# this preset — it keeps serve_sp on its own compute-bound mesh and hands
+# the cache over as a (quantized) stream.
+_SERVE_DECODE_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
+    (name, ()) if name in ("embed", "kv_heads", "kv_lora") else (name, targets)
+    for name, targets in _WEIGHT_RULES)
+
 # Named rule presets consumed by ``repro.launch.dryrun --preset``.
 PRESETS: Dict[str, Rules] = {
     # data-parallel batch + FSDP weights + tensor-parallel contractions
@@ -95,6 +111,10 @@ PRESETS: Dict[str, Rules] = {
     # model's sequence dim, batch over data (see Serving transport in
     # dist/README.md)
     "serve_sp": _SERVE_SP_RULES,
+    # disaggregated decode mesh: batch over data, cache resident (no
+    # sequence shard), TP over model — see Disaggregated serving in
+    # dist/README.md
+    "serve_decode": _SERVE_DECODE_RULES,
 }
 
 DEFAULT_RULES = PRESETS["baseline"]
@@ -148,6 +168,18 @@ def resolve_spec(shape: Sequence[int],
     while entries and entries[-1] is None:   # P(a, None) != P(a) in jax
         entries.pop()
     return P(*entries)
+
+
+def spec_shard_count(spec: P, mesh) -> int:
+    """Number of shards a resolved ``PartitionSpec`` splits an array into
+    on ``mesh`` (per-device size = global size / this)."""
+    sizes = _axis_sizes(mesh)
+    n = 1
+    for entry in spec:
+        for ax in (entry if isinstance(entry, tuple) else (entry,)):
+            if ax is not None:
+                n *= sizes[ax]
+    return n
 
 
 def mesh_axis_size(name: str) -> int:

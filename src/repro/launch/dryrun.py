@@ -22,6 +22,7 @@ from repro.configs import shapes as shapes_lib
 from repro.dist import sharding as shd
 from repro.launch import analysis
 from repro.launch.mesh import make_production_mesh
+from repro.launch import serve as serve_lib
 from repro.models import transformer
 from repro.train import optimizer as opt_lib
 from repro.train import step as step_lib
@@ -95,6 +96,12 @@ INT8_EF_WIRE_RATIO = (1 + 4 / 256) / 2
 # cell's counterpart, so memoizing here means every distinct serve program
 # compiles exactly once per process instead of twice.
 _SERVE_COLL_MEMO: Dict[tuple, Dict[str, Any]] = {}
+
+# Disaggregated-decode design-space reports (cache_transfer x kv_storage),
+# memoized the same way: the report is independent of the record's own
+# preset/act_transport, so a --preset/--act-transport sweep compiles the
+# transfer + storage-arm programs once per decode cell.
+_DISAGG_MEMO: Dict[tuple, Dict[str, Any]] = {}
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
@@ -262,6 +269,32 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         "roofline_fraction": ((mf / n_chips) / PEAK_FLOPS) / bound_s
         if bound_s else None,
     }
+    if kind == "decode":
+        # disaggregated serving design space: per cache_transfer x
+        # kv_storage combination, the prefill->decode cache stream's wire
+        # + the serve_decode step's wire + the decode mesh's resident
+        # cache bytes (all measured from compiled HLO / resolved layouts)
+        dkey = (arch, shape_name, multi_pod, cfg.remat_block,
+                cfg.capacity_factor)
+        rep = _DISAGG_MEMO.get(dkey)
+        if rep is None:
+            t0 = time.time()
+            rep = serve_lib.disagg_decode_report(
+                cfg, shape.global_batch, shape.seq_len, mesh, ici_bw=ICI_BW)
+            rep["compile_s"] = round(time.time() - t0, 2)
+            _DISAGG_MEMO[dkey] = rep
+        rec["disagg"] = rep
+        for name, cell in rep["cells"].items():
+            # flat roofline keys so scripts/bench_diff.py gates each combo
+            rec["roofline"]["disagg_collective_s_" + name] = \
+                cell["collective_s"]
+            # the combo sum is dominated by the one-time transfer, so the
+            # per-token and per-batch components are gated separately too
+            # (a 10x decode-step regression barely moves the sum)
+            t, s = name.split("x")
+            rec["roofline"]["disagg_transfer_s_" + t] = cell["transfer_s"]
+            rec["roofline"]["disagg_decode_step_s_" + s] = \
+                cell["decode_step_s"]
     rec["status"] = "ok"
     return rec
 

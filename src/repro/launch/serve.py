@@ -1,16 +1,29 @@
 """Serving launcher: mesh-placed batched prefill + decode with a sharded
-KV cache and a quantized activation-collective transport.
+KV cache, quantized activation collectives, and optional prefill/decode
+disaggregation.
 
-``python -m repro.launch.serve --arch paper-lm-100m --smoke`` runs a
-batched generation loop with the reduced config on a local mesh built over
-whatever devices exist (1 CPU device degrades to a (1, 1) mesh; the CI
-multidevice job forces 8 host devices and gets a real (data, model) mesh).
-Params, KV cache, and batch are explicitly placed: the ``serve_sp`` preset
-shards the cache over data (batch dim) x model (sequence dim) and the
-residual stream over sequence, and ``--act-transport int8`` runs the
-sequence-parallel activation all-gathers as blockwise-int8 chunks + scales
-(``repro.dist.collectives.act_gather``). Full configs lower on the
-production mesh via the dry-run (``repro.launch.dryrun --shape decode``).
+``python -m repro.launch.serve --arch paper-lm-100m`` runs a batched
+generation loop with the reduced smoke config (``--full`` lowers the real
+published config instead) on a local mesh built over whatever devices exist
+(1 CPU device degrades to a (1, 1) mesh; the CI multidevice job forces 8
+host devices and gets a real (data, model) mesh). Params, KV cache, and
+batch are explicitly placed: the ``serve_sp`` preset shards the cache over
+data (batch dim) x model (sequence dim) and the residual stream over
+sequence, and ``--act-transport int8`` runs the sequence-parallel
+activation all-gathers as blockwise-int8 chunks + scales
+(``repro.dist.collectives.act_gather``).
+
+``--disagg`` splits the pipeline across two meshes — AutoComp's dedicated
+compaction cluster, translated to serving: compute-bound prefill runs
+sequence-parallel (``serve_sp``) on one half of the devices, decode runs
+batch-heavy (``serve_decode``: cache resident, no per-step cache
+collectives) on the other half, and the KV cache is handed off between
+them once per request batch. ``--cache-transfer int8`` quantizes that
+handoff blockwise along the sequence axis (s8 chunks + f32 scales on the
+wire); ``--kv-storage int8`` additionally keeps the decode-resident cache
+int8 (half the HBM), dequantized per block at attention read time. The two
+knobs are orthogonal — 4 combinations, reported per decode dryrun cell
+(``repro.launch.dryrun --shape decode``).
 
 Continuous batching: requests at different positions share one decode step
 (``prompt_lens`` gives per-row lengths; positions/masks are per-row, so
@@ -30,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
+from repro.dist import collectives
 from repro.dist import sharding as shd
 from repro.launch.mesh import make_local_mesh
 from repro.models import transformer
@@ -54,10 +68,88 @@ def grow_cache(cache, target):
     return jax.tree.map(grow, cache, target)
 
 
+def make_cache_transfer_step(cfg, batch: int, total: int, mode: str):
+    """Single-mesh form of the prefill->decode cache handoff.
+
+    Returns ``transfer(cache) -> cache`` that reshards every leaf to the
+    layout the active ``axis_rules`` context resolves for its logical
+    axes; ``mode="int8"`` routes leaves with a sequence axis through
+    ``collectives.stream_int8`` (seq-blockwise s8 chunks + scales on the
+    wire), everything else (recurrent state, ``mode="bf16"``) moves raw.
+    jit it with in_shardings = the prefill layout and out_shardings = the
+    decode layout under ``axis_rules(mesh, serve_decode)`` and the
+    compiled HLO is the transfer's wire — what the dryrun and the disagg
+    mesh tests measure.
+    """
+    if mode not in collectives.CACHE_TRANSFERS:
+        raise ValueError(f"unknown cache_transfer {mode!r}; "
+                         f"expected one of {collectives.CACHE_TRANSFERS}")
+    axes = transformer.cache_axes(cfg, batch, total)
+
+    def transfer(cache):
+        def move(leaf, la):
+            la = tuple(la)
+            if mode == "int8" and "kv_seq" in la:
+                return collectives.stream_int8(
+                    leaf, *la, seq_axis=la.index("kv_seq"))
+            return shd.constrain(leaf, *la)
+        return jax.tree.map(move, cache, axes)
+    return transfer
+
+
+def _transfer_cache(cfg, cache, batch: int, total: int, dec_mesh, dec_rules,
+                    mode: str, dst_shardings):
+    """Two-mesh cache handoff: move the committed prefill cache onto the
+    decode mesh placement. ``"bf16"`` is a plain ``device_put``;
+    ``"int8"`` quantizes each sequence-carrying leaf blockwise along the
+    sequence axis *on the prefill mesh*, moves the s8 chunks + f32 scales
+    (the only cross-mesh traffic, ~1/4 the bf16 bytes), and dequantizes
+    on arrival — AutoComp's compaction-output handoff, as a cache stream.
+    """
+    if mode == "bf16":
+        return jax.device_put(cache, dst_shardings)
+    axes = transformer.cache_axes(cfg, batch, total)
+    leaves, treedef = jax.tree.flatten(cache)
+    axes_l = [tuple(a) for a in treedef.flatten_up_to(axes)]
+    dst_l = treedef.flatten_up_to(dst_shardings)
+    seq_ix = [la.index("kv_seq") if "kv_seq" in la else None for la in axes_l]
+    dtypes = [x.dtype for x in leaves]
+
+    def quant(ls):
+        return [x if si is None
+                else collectives.quantize_int8_seqaxis(x, si)
+                for x, si in zip(ls, seq_ix)]
+
+    q_leaves = jax.jit(quant)(leaves)          # runs on the prefill mesh
+    moved = []
+    for x, si, la, dst in zip(q_leaves, seq_ix, axes_l, dst_l):
+        if si is None:
+            moved.append(jax.device_put(x, dst))
+            continue
+        q, s = x
+        q_axes = la[:si] + la[si + 1:] + (la[si],)   # seq-last layout
+        q_sh = jax.sharding.NamedSharding(
+            dec_mesh, shd.resolve_spec(q.shape, q_axes, dec_mesh, dec_rules))
+        s_sh = jax.sharding.NamedSharding(
+            dec_mesh, shd.resolve_spec(s.shape, q_axes[:-1] + (None,),
+                                       dec_mesh, dec_rules))
+        moved.append((jax.device_put(q, q_sh), jax.device_put(s, s_sh)))
+
+    def dequant(ls):
+        return treedef.unflatten([
+            x if si is None
+            else collectives.dequantize_int8_seqaxis(x[0], x[1], si).astype(dt)
+            for x, si, dt in zip(ls, seq_ix, dtypes)])
+
+    return jax.jit(dequant, out_shardings=dst_shardings)(moved)
+
+
 def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
              temperature: float = 0.0, seed: int = 0,
              prompt_lens: Optional[np.ndarray] = None,
-             mesh=None, rules=None, act_transport: str = "bf16"):
+             mesh=None, rules=None, act_transport: str = "bf16",
+             decode_mesh=None, decode_rules=None,
+             cache_transfer: str = "bf16", kv_storage: str = "bf16"):
     """prompts: (B, S0) int32, right-padded when ragged. Greedy (or
     sampled) decode of ``max_new`` tokens per row.
 
@@ -67,6 +159,14 @@ def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
     solo run of its unpadded prompt). ``mesh`` places params/cache/batch
     explicitly (``rules`` defaults to the ``serve_sp`` preset);
     ``act_transport`` picks the activation all-gather wire format.
+
+    ``decode_mesh`` disaggregates: prefill compiles on ``mesh`` (its own
+    devices, ``rules``), decode on ``decode_mesh`` (``decode_rules``,
+    default the batch-heavy ``serve_decode`` preset), and the prefilled
+    cache crosses between them once — raw under
+    ``cache_transfer="bf16"``, as seq-blockwise s8 chunks + scales under
+    ``"int8"``. ``kv_storage="int8"`` keeps the decode-resident cache
+    int8 (works colocated too, and even without a mesh).
     """
     b, s0 = prompts.shape
     total = s0 + max_new
@@ -84,49 +184,98 @@ def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
                 f"ragged prompt_lens is unsupported for {cfg.name}: "
                 "windowed (ring-buffer) and recurrent-state families need "
                 "per-row prefill masking; pad to a uniform length instead")
+    if cache_transfer not in collectives.CACHE_TRANSFERS:
+        raise ValueError(f"unknown cache_transfer {cache_transfer!r}; "
+                         f"expected one of {collectives.CACHE_TRANSFERS}")
 
+    disagg = decode_mesh is not None
+    if disagg and mesh is None:
+        raise ValueError("disaggregated serving (decode_mesh=...) needs a "
+                         "prefill mesh too")
     if mesh is not None and rules is None:
         rules = shd.PRESETS["serve_sp"]
-    ctx = shd.axis_rules(mesh, rules) if mesh is not None \
-        else contextlib.nullcontext()
+    if disagg and decode_rules is None:
+        decode_rules = shd.PRESETS["serve_decode"]
+    dec_mesh = decode_mesh if disagg else mesh
+    dec_rules = decode_rules if disagg else rules
 
     prefill_fn = step_lib.make_prefill_step(cfg, act_transport)
-    decode_fn = step_lib.make_decode_step(cfg, total, act_transport)
+    # Under the serve_decode preset the cache is resident — decode has no
+    # per-step gather to compress, so an int8 act transport there would
+    # only round the whole resident cache through s8 every step (logit
+    # drift, extra compute, zero wire saved). Drop to bf16 for the decode
+    # half; custom decode_rules keep the caller's choice.
+    dec_act = "bf16" if disagg and dec_rules is shd.PRESETS["serve_decode"] \
+        else act_transport
+    # validates kv_storage (and the family's eligibility for int8)
+    decode_fn = step_lib.make_decode_step(cfg, total, dec_act, kv_storage)
 
-    with ctx:
-        c_shard = None
+    pre_ctx = shd.axis_rules(mesh, rules) if mesh is not None \
+        else contextlib.nullcontext()
+    dec_ctx = shd.axis_rules(dec_mesh, dec_rules) if dec_mesh is not None \
+        else contextlib.nullcontext()
+
+    c_abs_bf16 = transformer.abstract_cache(cfg, b, total)
+
+    with pre_ctx:
+        params_pre = params
         if mesh is not None:
             p_shard = shd.tree_shardings(transformer.abstract_params(cfg),
                                          transformer.param_axes(cfg),
                                          mesh, rules)
-            params = jax.device_put(params, p_shard)
-            c_abs = transformer.abstract_cache(cfg, b, total)
-            c_axes = transformer.cache_axes(cfg, b, total)
-            c_shard = shd.tree_shardings(c_abs, c_axes, mesh, rules)
-            prefill = jax.jit(prefill_fn)
-            decode = jax.jit(decode_fn, out_shardings=(None, c_shard))
-        else:
-            prefill = jax.jit(prefill_fn)
-            decode = jax.jit(decode_fn)
-
+            params_pre = jax.device_put(params, p_shard)
+        prefill = jax.jit(prefill_fn)
         pre_batch = {"tokens": jnp.asarray(prompts)}
         if ragged:
             pre_batch["last_pos"] = jnp.asarray(lens - 1)
-        logits, cache = prefill(params, pre_batch)
-        cache = grow_cache(cache, transformer.abstract_cache(cfg, b, total))
-        if c_shard is not None:
-            # commit the grown cache to its serve_sp placement; decode's
-            # out_shardings keep it resident there across the loop
-            cache = jax.device_put(cache, c_shard)
+        logits, cache = prefill(params_pre, pre_batch)
+        cache = grow_cache(cache, c_abs_bf16)
 
+    # ---- handoff: place the grown cache (and params) on the decode side
+    with dec_ctx:
+        c_shard = None
+        params_dec = params_pre
+        if dec_mesh is not None:
+            c_axes = transformer.cache_axes(cfg, b, total)
+            dst = shd.tree_shardings(c_abs_bf16, c_axes, dec_mesh, dec_rules)
+            c_shard = dst
+            if kv_storage == "int8":
+                c_shard = shd.tree_shardings(
+                    transformer.abstract_cache(cfg, b, total,
+                                               kv_storage="int8"),
+                    transformer.cache_axes(cfg, b, total,
+                                           kv_storage="int8"),
+                    dec_mesh, dec_rules)
+            if disagg:
+                # the decode cluster holds its own replica of the weights
+                p_shard_dec = shd.tree_shardings(
+                    transformer.abstract_params(cfg),
+                    transformer.param_axes(cfg), dec_mesh, dec_rules)
+                params_dec = jax.device_put(params, p_shard_dec)
+                cache = _transfer_cache(cfg, cache, b, total, dec_mesh,
+                                        dec_rules, cache_transfer, dst)
+            else:
+                # colocated: commit the grown cache to its serve placement
+                cache = jax.device_put(cache, dst)
+        if kv_storage == "int8":
+            quant = jax.jit(transformer.quantize_cache_int8,
+                            out_shardings=c_shard)
+            cache = quant(cache)
+        decode = jax.jit(decode_fn, out_shardings=(None, c_shard)) \
+            if c_shard is not None else jax.jit(decode_fn)
+
+        # first sampled token comes from prefill logits — the one batch
+        # tensor that crosses from the prefill to the decode mesh
         key = jax.random.PRNGKey(seed)
         out_tokens = []
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        tok = jnp.asarray(np.asarray(jnp.argmax(logits, -1),
+                                     dtype=np.int32)[:, None])
         for i in range(max_new):
             out_tokens.append(np.asarray(tok))
             pos = jnp.asarray(lens + i) if ragged \
                 else jnp.asarray(s0 + i, jnp.int32)
-            logits, cache = decode(params, cache, {"tokens": tok, "pos": pos})
+            logits, cache = decode(params_dec, cache,
+                                   {"tokens": tok, "pos": pos})
             if temperature > 0:
                 key, sub = jax.random.split(key)
                 tok = jax.random.categorical(sub, logits / temperature
@@ -145,10 +294,123 @@ def _pick_tp(n_devices: int, cfg) -> int:
     return 1
 
 
-def main() -> None:
+def make_disagg_meshes(cfg, tp_prefill: int = 0, tp_decode: int = 0):
+    """Split the local devices into a prefill mesh and a decode mesh.
+
+    With >= 2 devices the halves are disjoint — two real clusters, the
+    cache handoff is a genuine cross-mesh transfer. A single device serves
+    both roles (degenerate (1, 1) meshes), so the smoke path runs
+    anywhere. Each half keeps a (data, model) layout; ``tp_*=0``
+    auto-picks the model degree per half.
+    """
+    devs = jax.devices()
+    n = len(devs)
+    pre, dec = (devs[:n // 2], devs[n // 2:]) if n >= 2 else (devs, devs)
+
+    def mk(ds, tp):
+        tp = tp or _pick_tp(len(ds), cfg)
+        if len(ds) % tp != 0:
+            raise ValueError(
+                f"model-parallel degree {tp} does not divide the "
+                f"{len(ds)}-device mesh half: disaggregated serving gives "
+                f"each role {len(ds)} of the {n} devices, so --tp must "
+                f"divide that")
+        arr = np.array(ds).reshape(len(ds) // tp, tp)
+        return jax.sharding.Mesh(arr, ("data", "model"))
+    return mk(pre, tp_prefill), mk(dec, tp_decode)
+
+
+def disagg_decode_report(cfg, batch: int, seq_len: int, mesh,
+                         ici_bw: float = 50e9):
+    """Compile the disaggregated-decode design space on one mesh and
+    report every cache_transfer x kv_storage combination.
+
+    Per combination ``"<transfer>x<storage>"``: ``transfer_s`` (the
+    serve_sp -> serve_decode cache reshard's wire, HLO-parsed from the
+    compiled transfer program), ``decode_step_s`` (the decode step's
+    per-token wire under the storage arm), their sum ``collective_s``,
+    and ``cache_resident_bytes_per_device`` (what the decode mesh's HBM
+    actually holds — the storage arm's rent). Storage arms a family does
+    not support (recurrent caches) are skipped and named in
+    ``"unsupported"``. Used by ``repro.launch.dryrun`` for decode cells
+    and exercised directly by the disagg mesh tests.
+    """
+    from repro.launch import analysis
+
+    pre_rules = shd.PRESETS["serve_sp"]
+    dec_rules = shd.PRESETS["serve_decode"]
+    c_abs = transformer.abstract_cache(cfg, batch, seq_len)
+    c_axes = transformer.cache_axes(cfg, batch, seq_len)
+    pre_shard = shd.tree_shardings(c_abs, c_axes, mesh, pre_rules)
+    dec_shard = shd.tree_shardings(c_abs, c_axes, mesh, dec_rules)
+    p_abs = transformer.abstract_params(cfg)
+    p_shard = shd.tree_shardings(p_abs, transformer.param_axes(cfg),
+                                 mesh, dec_rules)
+
+    transfers = {}
+    for t in collectives.CACHE_TRANSFERS:
+        fn = make_cache_transfer_step(cfg, batch, seq_len, t)
+        with shd.axis_rules(mesh, dec_rules):
+            hlo = jax.jit(fn, in_shardings=(pre_shard,),
+                          out_shardings=dec_shard
+                          ).lower(c_abs).compile().as_text()
+        transfers[t] = analysis.hlo_collective_bytes(hlo)
+
+    def device_bytes(abs_tree, axes_tree):
+        tot = 0.0
+        for leaf, la in zip(jax.tree.leaves(abs_tree),
+                            jax.tree.structure(abs_tree
+                                               ).flatten_up_to(axes_tree)):
+            spec = shd.resolve_spec(leaf.shape, tuple(la), mesh, dec_rules)
+            shards = shd.spec_shard_count(spec, mesh)
+            tot += float(np.prod(leaf.shape)) * leaf.dtype.itemsize / shards
+        return int(tot)
+
+    decodes, cache_bytes, unsupported = {}, {}, []
+    batch_abs = {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+                 "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    for s in collectives.KV_STORAGES:
+        try:
+            fn = step_lib.make_decode_step(cfg, seq_len, "bf16", s)
+        except NotImplementedError:
+            unsupported.append(s)
+            continue
+        cs_abs = transformer.abstract_cache(cfg, batch, seq_len,
+                                            kv_storage=s)
+        cs_axes = transformer.cache_axes(cfg, batch, seq_len, kv_storage=s)
+        cs_shard = shd.tree_shardings(cs_abs, cs_axes, mesh, dec_rules)
+        with shd.axis_rules(mesh, dec_rules):
+            hlo = jax.jit(fn, in_shardings=(p_shard, cs_shard, None),
+                          out_shardings=(None, cs_shard)
+                          ).lower(p_abs, cs_abs, batch_abs
+                                  ).compile().as_text()
+        decodes[s] = analysis.hlo_collective_bytes(hlo)
+        cache_bytes[s] = device_bytes(cs_abs, cs_axes)
+
+    cells = {}
+    for t, tcoll in transfers.items():
+        for s, dcoll in decodes.items():
+            tw = float(tcoll["total_wire_bytes_bf16eq"])
+            dw = float(dcoll["total_wire_bytes_bf16eq"])
+            cells[f"{t}x{s}"] = {
+                "transfer_s": tw / ici_bw,
+                "decode_step_s": dw / ici_bw,
+                "collective_s": (tw + dw) / ici_bw,
+                "transfer_wire_bytes_bf16eq": int(tw),
+                "transfer_wire_bytes_bf16eq_s8":
+                    int(tcoll["total_wire_bytes_bf16eq_s8"]),
+                "decode_wire_bytes_bf16eq": int(dw),
+                "cache_resident_bytes_per_device": cache_bytes[s],
+            }
+    return {"cells": cells, "unsupported_storage": unsupported}
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b")
-    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", action="store_true",
+                    help="serve the published config instead of the "
+                         "reduced smoke config (the default)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
@@ -161,14 +423,43 @@ def main() -> None:
                     choices=list(step_lib.ACT_TRANSPORTS))
     ap.add_argument("--ragged", action="store_true",
                     help="serve a mixed-length batch (continuous batching)")
-    args = ap.parse_args()
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregate: prefill and decode on separate "
+                         "meshes (half the devices each), the cache handed "
+                         "off between them")
+    ap.add_argument("--cache-transfer", default="bf16",
+                    choices=list(step_lib.CACHE_TRANSFERS),
+                    help="wire format of the disagg prefill->decode cache "
+                         "handoff")
+    ap.add_argument("--kv-storage", default="bf16",
+                    choices=list(step_lib.KV_STORAGES),
+                    help="decode-resident cache dtype (int8 halves cache "
+                         "HBM; attention dequantizes per block at read "
+                         "time)")
+    return ap
 
-    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+
+def resolve_config(args):
+    """--full lowers the published config; the default is the smoke
+    config (same family and code paths, CPU-runnable dims)."""
+    return get_config(args.arch) if args.full else smoke_config(args.arch)
+
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
+    cfg = resolve_config(args)
     if not cfg.supports_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; no decode serving")
-    tp = args.tp or _pick_tp(jax.device_count(), cfg)
-    mesh = make_local_mesh(model_parallel=tp)
-    rules = shd.PRESETS[args.preset]
+
+    decode_mesh = decode_rules = None
+    if args.disagg:
+        mesh, decode_mesh = make_disagg_meshes(cfg, args.tp, args.tp)
+        rules = shd.PRESETS[args.preset]
+        decode_rules = shd.PRESETS["serve_decode"]
+    else:
+        tp = args.tp or _pick_tp(jax.device_count(), cfg)
+        mesh = make_local_mesh(model_parallel=tp)
+        rules = shd.PRESETS[args.preset]
 
     key = jax.random.PRNGKey(0)
     params = transformer.init_params(cfg, key)
@@ -183,13 +474,24 @@ def main() -> None:
     t0 = time.time()
     out = generate(cfg, params, prompts, max_new=args.max_new,
                    temperature=args.temperature, prompt_lens=lens,
-                   mesh=mesh, rules=rules, act_transport=args.act_transport)
+                   mesh=mesh, rules=rules, act_transport=args.act_transport,
+                   decode_mesh=decode_mesh, decode_rules=decode_rules,
+                   cache_transfer=args.cache_transfer,
+                   kv_storage=args.kv_storage)
     dt = time.time() - t0
     n_tok = out.size
+    mesh_desc = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if decode_mesh is not None:
+        mesh_desc = {"prefill": dict(zip(mesh.axis_names,
+                                         mesh.devices.shape)),
+                     "decode": dict(zip(decode_mesh.axis_names,
+                                        decode_mesh.devices.shape))}
     print(f"[serve] arch={cfg.name} batch={args.batch} "
           f"prompt={args.prompt_len} new={args.max_new} "
-          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
-          f"preset={args.preset} act_transport={args.act_transport}"
+          f"mesh={mesh_desc} "
+          f"preset={args.preset} act_transport={args.act_transport} "
+          f"disagg={args.disagg} cache_transfer={args.cache_transfer} "
+          f"kv_storage={args.kv_storage}"
           + (f" lens={lens.tolist()}" if lens is not None else ""))
     print(f"[serve] generated {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s incl. compile)")

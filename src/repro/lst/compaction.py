@@ -156,7 +156,13 @@ def execute_tasks_atomic(table: LogStructuredTable,
         live_inputs = [f for f in agg.inputs if f.path in inputs_alive]
         if attempt > 0 and len(live_inputs) < 2:
             # same guard as execute_task: a conflict that killed the inputs
-            # must not resurrect their rows via the merged outputs
+            # must not resurrect their rows via the merged outputs. Known
+            # limitation (matches Iceberg's file-granularity semantics and
+            # execute_task): when >= 2 inputs stay live the merged outputs
+            # still commit, and they were built from ALL planned inputs —
+            # rows of an input deleted concurrently mid-rewrite survive
+            # inside the compacted file even though the file-level delete
+            # stands. Row-level reconciliation belongs to the merge_fn.
             res.error = "inputs no longer live after conflict"
             break
         try:
@@ -169,14 +175,21 @@ def execute_tasks_atomic(table: LogStructuredTable,
             res.retries = attempt + 1
             txn = table.new_transaction()
     if res.success:
-        for f in agg.inputs:
+        # Only the inputs OUR commit replaced count (and get their blobs
+        # dropped): ``live_inputs`` is exactly what the successful
+        # transaction removed. The old accounting re-scanned liveness
+        # *after* the commit and credited every planned input that was
+        # gone — including files concurrent writers deleted — and worse,
+        # deleted the blobs of inputs that were already dead at commit
+        # time (another committer's files to clean, possibly still
+        # referenced by its snapshots). Mirrors execute_task's
+        # ``len(live_inputs)``.
+        for f in live_inputs:
             if table.store.exists(f.path):
                 table.store.delete(f.path)
-        inputs_alive = {f.path for f in table.current_files()}
-        res.files_removed = len([f for f in agg.inputs
-                                 if f.path not in inputs_alive])
+        res.files_removed = len(live_inputs)
         res.files_added = len(new_files)
-        res.bytes_rewritten = sum(f.size_bytes for f in agg.inputs)
+        res.bytes_rewritten = sum(f.size_bytes for f in live_inputs)
         res.gbhr = executor_memory_gb * (res.bytes_rewritten
                                          / rewrite_bytes_per_hour)
     else:
@@ -241,7 +254,9 @@ def execute_task(table: LogStructuredTable, task: CompactionTask,
                 res.error = "inputs no longer live after conflict"
                 break
     if res.success:
-        for f in task.inputs:           # physical cleanup of replaced files
+        # physical cleanup of the files OUR commit replaced; inputs a
+        # concurrent writer already removed are its blobs to clean
+        for f in live_inputs:
             if table.store.exists(f.path):
                 table.store.delete(f.path)
         res.files_removed = len(live_inputs)

@@ -19,7 +19,6 @@ reproduced by counting these.
 
 from __future__ import annotations
 
-import itertools
 import json
 import threading
 import time
@@ -33,9 +32,6 @@ class CommitConflict(Exception):
     def __init__(self, msg: str, kind: str = "conflict"):
         super().__init__(msg)
         self.kind = kind
-
-
-_ids = itertools.count(1)
 
 
 def _logical_now() -> float:
@@ -149,6 +145,23 @@ class LogStructuredTable:
             return removed
 
     # ------------------------------------------------------------- internals
+    def _next_snapshot_id(self) -> int:
+        """Per-table snapshot IDs, seeded from the table's own metadata.
+
+        NFR2 determinism: a module-global counter (the old
+        ``itertools.count``) leaks allocation order across every table in
+        the process, so identical catalog states produced different
+        snapshot IDs and manifest paths depending on what else had
+        committed first. Deriving the next ID from the newest snapshot in
+        ``self.meta`` makes IDs (and the metadata paths built from them) a
+        pure function of table history — two identical runs serialize
+        byte-identical metadata. Expiry only drops *old* snapshots, so the
+        newest survives and IDs stay strictly increasing.
+        """
+        if self.meta.snapshots:
+            return self.meta.snapshots[-1].snapshot_id + 1
+        return 1
+
     def _persist_metadata(self) -> None:
         path = f"{self.meta.table_id}/metadata/v{self.meta.version}.json"
         self.store.put(path, self.meta.serialize())
@@ -169,7 +182,7 @@ class LogStructuredTable:
                         kind="stale_files")
             new_files = tuple(f for f in base if f.path not in removed_paths
                               ) + tuple(txn.added)
-            sid = next(_ids)
+            sid = self._next_snapshot_id()
             seq = (self.meta.snapshots[-1].sequence_number + 1
                    if self.meta.snapshots else 1)
             manifest = ManifestFile(

@@ -104,6 +104,19 @@ def gqa_apply(cfg: ModelConfig, p, x: jnp.ndarray, mode: str,
         k = apply_rope(k, pos_bt, cfg.rope_theta)
         size = cache["k"].shape[1]
         cache_sp = ("batch", "kv_seq", "kv_heads", None)
+        storage = collectives.current_kv_storage()
+        if storage == "int8":
+            # int8-resident cache: quantize the new token's K/V per
+            # position along the feature axis (blocks never span
+            # positions, so a slot write touches only its own scales) and
+            # store s8 values + f32 scales; decode_attention dequantizes
+            # per block at read time.
+            k, k_sc = collectives.quantize_int8_lastdim(k)
+            v, v_sc = collectives.quantize_int8_lastdim(v)
+            k_scale = constrain(ring_update(cache["k_scale"], k_sc, pos),
+                                *cache_sp)
+            v_scale = constrain(ring_update(cache["v_scale"], v_sc, pos),
+                                *cache_sp)
         k_cache = constrain(ring_update(cache["k"], k, pos), *cache_sp)
         v_cache = constrain(ring_update(cache["v"], v, pos), *cache_sp)
         kpos = cache_slot_positions(cache_len_total + 1, size, pos)
@@ -114,13 +127,23 @@ def gqa_apply(cfg: ModelConfig, p, x: jnp.ndarray, mode: str,
         # slot, so this is decode's activation all-gather (s8 under
         # act_transport="int8"). Gather to a head-replicated layout — a
         # pure all-gather over the sequence shards; the scores einsum then
-        # slices heads locally against the head-sharded q. The *stored*
-        # cache stays seq-sharded and unquantized — only the gathered
-        # attention operand is compressed.
-        k_att = collectives.act_gather(k_cache, "batch", None, None, None)
-        v_att = collectives.act_gather(v_cache, "batch", None, None, None)
-        out = decode_attention(q, k_att, v_att, kpos, pos)
-        new_cache = {"k": k_cache, "v": v_cache}
+        # slices heads locally against the head-sharded q. Under
+        # serve_decode the cache is batch-resident and these constraints
+        # move nothing. An int8-*resident* cache passes through the gather
+        # as s8 (already compressed); its f32 scales reshard raw — they
+        # are 1/block of the payload.
+        gather_sp = ("batch", None, None, None)
+        k_att = collectives.act_gather(k_cache, *gather_sp)
+        v_att = collectives.act_gather(v_cache, *gather_sp)
+        if storage == "int8":
+            out = decode_attention(q, k_att, v_att, kpos, pos,
+                                   k_scale=constrain(k_scale, *gather_sp),
+                                   v_scale=constrain(v_scale, *gather_sp))
+            new_cache = {"k": k_cache, "v": v_cache,
+                         "k_scale": k_scale, "v_scale": v_scale}
+        else:
+            out = decode_attention(q, k_att, v_att, kpos, pos)
+            new_cache = {"k": k_cache, "v": v_cache}
     else:
         positions = jnp.arange(s, dtype=jnp.int32)[None, :]
         q = apply_rope(q, positions, cfg.rope_theta)
@@ -202,20 +225,42 @@ def mla_apply(cfg: ModelConfig, p, x, mode, cache, pos, cache_len_total):
         positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[..., None],
                                      (b, 1))
         q, latent, k_rope = _mla_qk(cfg, p, x, positions)
+        storage = collectives.current_kv_storage()
+        kr_new = k_rope[:, :, None, :]
+        if storage == "int8":
+            # int8-resident latent cache (MLA's read-time boundary is the
+            # per-head expansion, so dequantization happens just before
+            # _mla_expand instead of inside decode_attention)
+            latent, lat_sc = collectives.quantize_int8_lastdim(latent)
+            kr_new, kr_sc = collectives.quantize_int8_lastdim(kr_new)
+            lat_scale = constrain(ring_update(cache["latent_scale"], lat_sc,
+                                              pos), "batch", "kv_seq", None)
+            kr_scale = constrain(ring_update(cache["k_rope_scale"], kr_sc,
+                                             pos), "batch", "kv_seq", None,
+                                  None)
         lat_cache = constrain(ring_update(cache["latent"], latent, pos),
                               "batch", "kv_seq", None)
-        kr_cache = constrain(ring_update(cache["k_rope"],
-                                         k_rope[:, :, None, :], pos),
+        kr_cache = constrain(ring_update(cache["k_rope"], kr_new, pos),
                              "batch", "kv_seq", None, None)
         # decode's activation all-gather (MLA form): the latent cache is
-        # the compressed KV state — gather it (s8 under int8 transport)
-        # before the per-head expansion.
+        # the compressed KV state — gather it (s8 under int8 transport, or
+        # natively s8 when int8-resident) before the per-head expansion.
         lat_att = collectives.act_gather(lat_cache, "batch", None, None)
         kr_att = collectives.act_gather(kr_cache, "batch", None, None, None)
+        if storage == "int8":
+            lat_att = collectives.dequantize_int8_lastdim(
+                lat_att, constrain(lat_scale, "batch", None, None))
+            kr_att = collectives.dequantize_int8_lastdim(
+                kr_att, constrain(kr_scale, "batch", None, None, None))
+            lat_att = lat_att.astype(x.dtype)
+            kr_att = kr_att.astype(x.dtype)
         k, v = _mla_expand(cfg, p, lat_att, kr_att[..., 0, :])
         kpos = cache_slot_positions(cache_len_total + 1, lat_cache.shape[1], pos)
         out = decode_attention(q, k, v, kpos, pos)
         new_cache = {"latent": lat_cache, "k_rope": kr_cache}
+        if storage == "int8":
+            new_cache["latent_scale"] = lat_scale
+            new_cache["k_rope_scale"] = kr_scale
     else:
         positions = jnp.arange(s, dtype=jnp.int32)[None, :]
         q, latent, k_rope = _mla_qk(cfg, p, x, positions)

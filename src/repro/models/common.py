@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import collectives
 from repro.dist.sharding import constrain
 
 PyTree = Any
@@ -202,14 +203,24 @@ def blockwise_attention(q, k, v, *, causal=True, window=0,
     return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv)
 
 
-def decode_attention(q, k_cache, v_cache, k_positions, pos):
+def decode_attention(q, k_cache, v_cache, k_positions, pos,
+                     k_scale=None, v_scale=None):
     """Single-token attention against a cache. q:(B,1,H,D), caches (B,S,Hkv,D).
 
     ``k_positions``: (S,) or per-row (B,S) absolute slot positions (-1
     invalid); ``pos``: scalar or per-row (B,) current position. Per-row
     forms are the continuous-batching case — every request sits at its own
     position and padded/stale slots are masked row-wise.
+
+    ``k_scale``/``v_scale`` (B,S,Hkv,nb) mark an int8-*resident* cache
+    (``kv_storage="int8"``): the stored leaves are blockwise-s8 along the
+    feature axis and are dequantized here, per block, at read time — HBM
+    holds half the bytes and only the attention operands ever exist in
+    float.
     """
+    if k_scale is not None:
+        k_cache = collectives.dequantize_int8_lastdim(k_cache, k_scale)
+        v_cache = collectives.dequantize_int8_lastdim(v_cache, v_scale)
     b, _, h, d = q.shape
     hkv = k_cache.shape[2]
     dv = v_cache.shape[-1]

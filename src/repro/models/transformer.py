@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ModelConfig
+from repro.dist import collectives
 from repro.dist.collectives import act_gather
 from repro.dist.sharding import constrain
 from repro.models import attention, moe, ssm, xlstm
@@ -86,8 +87,20 @@ def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
 # caches
 # ---------------------------------------------------------------------------
 
-def cache_struct(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
-    """Shapes (python ints) for the decode cache; no allocation."""
+# Cache leaves that carry attention KV state — the leaves an int8-resident
+# cache (kv_storage="int8") stores as s8 values + f32 scales blocked along
+# the trailing feature axis. Recurrent-state leaves (ssm_*, xlstm blocks)
+# are never storage-quantized.
+QUANTIZABLE_CACHE_KEYS = ("k", "v", "latent", "k_rope")
+
+
+def cache_struct(cfg: ModelConfig, batch: int, seq: int,
+                 kv_storage: str = "bf16") -> Dict[str, Any]:
+    """Shapes (python ints) for the decode cache; no allocation.
+
+    ``kv_storage="int8"`` adds a ``<leaf>_scale`` entry per attention leaf
+    (shape = leaf shape with the trailing feature dim replaced by its
+    per-position block count)."""
     if cfg.family == "ssm_xlstm":
         return {"blocks": [
             (xlstm.mlstm_cache_shape(cfg, batch)
@@ -102,6 +115,11 @@ def cache_struct(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
     if cfg.family == "hybrid":
         for k, v in ssm.ssm_cache_shape(cfg, batch).items():
             out["ssm_" + k] = (cfg.n_layers,) + v
+    if kv_storage == "int8":
+        for k in [k for k in out if k in QUANTIZABLE_CACHE_KEYS]:
+            shape = out[k]
+            _, nb = collectives.lastdim_blocks(shape[-1])
+            out[k + "_scale"] = shape[:-1] + (nb,)
     return out
 
 
@@ -112,11 +130,18 @@ _CACHE_AXES = {
     "k_rope": ("layers", "batch", "kv_seq", None, None),
     "ssm_conv": ("layers", "batch", None, "ssm_inner"),
     "ssm_ssm": ("layers", "batch", "ssm_inner", "ssm_state"),
+    # per-position quantization scales: same layout as their value leaf,
+    # trailing block axis unsharded
+    "k_scale": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "v_scale": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "latent_scale": ("layers", "batch", "kv_seq", None),
+    "k_rope_scale": ("layers", "batch", "kv_seq", None, None),
 }
 
 
-def cache_axes(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
-    struct = cache_struct(cfg, batch, seq)
+def cache_axes(cfg: ModelConfig, batch: int, seq: int,
+               kv_storage: str = "bf16") -> Dict[str, Any]:
+    struct = cache_struct(cfg, batch, seq, kv_storage)
     if cfg.family == "ssm_xlstm":
         return {"blocks": [
             {k: ("batch",) + (None,) * (len(v) - 1) for k, v in blk.items()}
@@ -124,20 +149,50 @@ def cache_axes(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
     return {k: _CACHE_AXES[k] for k in struct}
 
 
+def _cache_leaf_dtype(name: str, kv_storage: str, dtype):
+    if kv_storage != "int8" or name not in _CACHE_AXES:
+        return dtype
+    if name.endswith("_scale"):
+        return jnp.float32
+    if name in QUANTIZABLE_CACHE_KEYS:
+        return jnp.int8
+    return dtype
+
+
 def abstract_cache(cfg: ModelConfig, batch: int, seq: int,
-                   dtype=jnp.bfloat16) -> Dict[str, Any]:
-    def mk(shape):
-        return jax.ShapeDtypeStruct(shape, dtype)
-    struct = cache_struct(cfg, batch, seq)
+                   dtype=jnp.bfloat16, kv_storage: str = "bf16"
+                   ) -> Dict[str, Any]:
+    def mk(shape, name=None):
+        return jax.ShapeDtypeStruct(
+            shape, _cache_leaf_dtype(name, kv_storage, dtype))
+    struct = cache_struct(cfg, batch, seq, kv_storage)
     if cfg.family == "ssm_xlstm":
         return {"blocks": [{k: mk(v) for k, v in blk.items()}
                            for blk in struct["blocks"]]}
-    return {k: mk(v) for k, v in struct.items()}
+    return {k: mk(v, k) for k, v in struct.items()}
 
 
-def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16,
+               kv_storage: str = "bf16"):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        abstract_cache(cfg, batch, seq, dtype))
+                        abstract_cache(cfg, batch, seq, dtype, kv_storage))
+
+
+def quantize_cache_int8(cache: Dict[str, Any]) -> Dict[str, Any]:
+    """Convert a bf16 decode cache into the int8-resident storage layout:
+    every attention leaf becomes s8 values + a ``<leaf>_scale`` f32 leaf,
+    quantized blockwise along the trailing feature axis (per position —
+    matching what the decode step writes for each new token). Recurrent
+    leaves pass through untouched. jit-compatible."""
+    out: Dict[str, Any] = {}
+    for name, leaf in cache.items():
+        if name in QUANTIZABLE_CACHE_KEYS:
+            q, s = collectives.quantize_int8_lastdim(leaf)
+            out[name] = q
+            out[name + "_scale"] = s
+        else:
+            out[name] = leaf
+    return out
 
 
 # ---------------------------------------------------------------------------

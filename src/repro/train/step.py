@@ -19,6 +19,8 @@ from repro.train import optimizer as opt_lib
 
 GRAD_TRANSPORTS = ("bf16", "int8_ef")
 ACT_TRANSPORTS = collectives.ACT_TRANSPORTS   # serve steps: ("bf16", "int8")
+KV_STORAGES = collectives.KV_STORAGES         # decode cache residency
+CACHE_TRANSFERS = collectives.CACHE_TRANSFERS # prefill->decode handoff wire
 
 
 def make_loss_fn(cfg: ModelConfig):
@@ -208,7 +210,8 @@ def make_prefill_step(cfg: ModelConfig, act_transport: Optional[str] = "bf16"):
 
 
 def make_decode_step(cfg: ModelConfig, cache_len_total: int,
-                     act_transport: Optional[str] = "bf16"):
+                     act_transport: Optional[str] = "bf16",
+                     kv_storage: str = "bf16"):
     """Returns decode_step(params, cache, batch) -> (logits, new_cache).
 
     ``batch["pos"]`` is a scalar position or a per-row ``(B,)`` vector
@@ -217,11 +220,28 @@ def make_decode_step(cfg: ModelConfig, cache_len_total: int,
     activation all-gather is the cache gather feeding single-token
     attention, and ``act_transport="int8"`` runs it as blockwise-int8
     chunks + scales (see :func:`make_prefill_step`).
+
+    ``kv_storage="int8"`` makes the cache int8-*resident*: the step
+    expects (and emits) the storage layout from
+    ``transformer.abstract_cache(..., kv_storage="int8")`` — s8 value
+    leaves plus f32 ``<leaf>_scale`` leaves — writes each new token
+    quantized per position, and attention dequantizes per block at read
+    time. Orthogonal to ``act_transport`` (storage is what HBM holds; the
+    transport is how a reshard crosses the wire).
     """
     _check_act_transport(act_transport)
+    if kv_storage not in KV_STORAGES:
+        raise ValueError(f"unknown kv_storage {kv_storage!r}; "
+                         f"expected one of {KV_STORAGES}")
+    if kv_storage == "int8" and cfg.family in ("hybrid", "ssm_xlstm"):
+        raise NotImplementedError(
+            f"kv_storage='int8' is unsupported for {cfg.name}: recurrent "
+            "state leaves (ssm/xlstm) accumulate quantization error across "
+            "steps; only pure-attention caches are int8-resident")
 
     def decode_step(params, cache, batch):
-        with collectives.act_transport_scope(act_transport):
+        with collectives.act_transport_scope(act_transport), \
+                collectives.kv_storage_scope(kv_storage):
             logits, new_cache = transformer.forward(
                 cfg, params, batch, "decode", cache=cache,
                 cache_len_total=cache_len_total)
@@ -232,7 +252,8 @@ def make_decode_step(cfg: ModelConfig, cache_len_total: int,
 def step_for_shape(cfg: ModelConfig, shape: ShapeSpec,
                    adamw: Optional[opt_lib.AdamWConfig] = None,
                    grad_transport: str = "bf16",
-                   act_transport: str = "bf16"):
+                   act_transport: str = "bf16",
+                   kv_storage: str = "bf16"):
     """The function the dry-run lowers for a given cell, plus its kind."""
     if shape.kind == "train":
         return make_train_step(cfg, adamw or opt_lib.AdamWConfig(),
@@ -242,4 +263,5 @@ def step_for_shape(cfg: ModelConfig, shape: ShapeSpec,
         if not cfg.supports_decode:      # encoder: no cache semantics
             return make_encode_step(cfg, act_transport), "encode"
         return make_prefill_step(cfg, act_transport), "prefill"
-    return make_decode_step(cfg, shape.seq_len, act_transport), "decode"
+    return make_decode_step(cfg, shape.seq_len, act_transport,
+                            kv_storage), "decode"

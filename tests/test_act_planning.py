@@ -1,0 +1,170 @@
+"""Scheduler planning cost: one bin-pack per table per ``execute`` call.
+
+``Scheduler.plan`` used to run ``comp.plan_table`` over the WHOLE table
+for every partition-scope candidate and then filter to the candidate's
+partition — O(P^2) bins planned for P partition candidates of one table.
+``execute`` now plans each table once and dispatches bins by partition
+(execution never crosses partitions, so compacting one partition leaves
+the other partitions' bins valid)."""
+
+import pytest
+
+from repro.core import act
+from repro.core.model import Candidate, Scope
+from repro.lst import Catalog, InMemoryStore
+from repro.lst import compaction as comp
+from repro.lst.files import DataFile
+from repro.lst.workload import SimClock
+
+MB = 1 << 20
+
+
+def make_table(n_parts=6, files_per_part=3):
+    clock = SimClock()
+    store = InMemoryStore()
+    cat = Catalog(store, now_fn=clock.now)
+    t = cat.create_table("ns", "t", "p")
+    t.now_fn = clock.now
+    files = []
+    for p in range(n_parts):
+        for i in range(files_per_part):
+            path = f"{t.table_id}/data/p{p}-f{i}.bin"
+            t.store.put(path, b"x" * 64)
+            files.append(DataFile(path, 4 * MB, 10, f"part{p}"))
+    t.append(files)
+    return t
+
+
+@pytest.fixture
+def plan_counter(monkeypatch):
+    """Count comp.plan_table calls made through the act module."""
+    calls = {"n": 0}
+    real = comp.plan_table
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(act.comp, "plan_table", counting)
+    return calls
+
+
+class TestLinearPlanning:
+    def test_one_plan_per_table_for_partition_candidates(self, plan_counter):
+        n_parts = 6
+        t = make_table(n_parts=n_parts)
+        cands = [Candidate(table=t, scope=Scope.PARTITION,
+                           partition=f"part{p}") for p in range(n_parts)]
+        sched = act.Scheduler(target_file_bytes=64 * MB)
+        report = sched.execute(cands)
+        # the counter-based linearity claim: P partition candidates of one
+        # table cost ONE whole-table bin-pack, not P
+        assert plan_counter["n"] == 1
+        # and every partition actually got compacted
+        assert len(report.results) == n_parts
+        assert all(r.success for r in report.results)
+        assert t.file_count() == n_parts
+
+    def test_dispatch_matches_per_candidate_replanning(self):
+        """The cached-plan dispatch compacts exactly what per-candidate
+        replanning compacted: one output file per partition, same bytes."""
+        t1, t2 = make_table(), make_table()
+        cands = lambda t: [Candidate(table=t, scope=Scope.PARTITION,
+                                     partition=f"part{p}") for p in range(6)]
+        fast = act.Scheduler(target_file_bytes=64 * MB).execute(cands(t1))
+        # reference: plan each candidate independently (the old behavior)
+        slow_removed = 0
+        for cand in cands(t2):
+            tasks = act.Scheduler(target_file_bytes=64 * MB).plan(cand)
+            for task in tasks:
+                res = comp.execute_task(t2, task)
+                assert res.success
+                slow_removed += res.files_removed
+        assert fast.files_removed == slow_removed
+        assert sorted(f.partition for f in t1.current_files()) \
+            == sorted(f.partition for f in t2.current_files())
+
+    def test_table_scope_execution_invalidates_cached_plan(self,
+                                                           plan_counter):
+        t = make_table(n_parts=2)
+        cands = [Candidate(table=t, scope=Scope.TABLE),
+                 Candidate(table=t, scope=Scope.TABLE)]
+        sched = act.Scheduler(target_file_bytes=64 * MB)
+        report = sched.execute(cands)
+        # an atomic table rewrite changes every partition's files: the
+        # second table-scope candidate must replan, not reuse stale bins
+        assert plan_counter["n"] == 2
+        assert report.results[0].success
+
+    def test_public_plan_api_unchanged(self):
+        t = make_table(n_parts=3)
+        sched = act.Scheduler(target_file_bytes=64 * MB)
+        tasks = sched.plan(Candidate(table=t, scope=Scope.PARTITION,
+                                     partition="part1"))
+        assert tasks and all(task.scope == "part1" for task in tasks)
+        all_tasks = sched.plan(Candidate(table=t, scope=Scope.TABLE))
+        assert {task.scope for task in all_tasks} \
+            == {f"part{p}" for p in range(3)}
+
+
+class TestStalePlanInvalidation:
+    """A cached bin that references a no-longer-live file — consumed by an
+    earlier candidate, or deleted by a concurrent writer — must trigger a
+    replan, never execute (a stale bin would merge a logically-deleted
+    file's rows into the compacted output)."""
+
+    def test_concurrent_delete_between_candidates_replans(self,
+                                                          plan_counter):
+        """A writer deletes a part1 file while part0's candidate runs;
+        part1's candidate must not execute the bin planned before the
+        delete (which still references the deleted file)."""
+        t = make_table(n_parts=2)
+        victim = next(f for f in t.current_files()
+                      if f.partition == "part1")
+        state = {"done": False}
+
+        def delete_part1_file(table, _task):
+            if not state["done"]:
+                state["done"] = True
+                table.delete_files([victim])
+
+        cands = [Candidate(table=t, scope=Scope.PARTITION, partition="part0"),
+                 Candidate(table=t, scope=Scope.PARTITION, partition="part1")]
+        report = act.Scheduler(target_file_bytes=64 * MB,
+                               interleave_fn=delete_part1_file,
+                               ).execute(cands)
+        assert plan_counter["n"] == 2    # staleness forced the replan
+        assert all(r.success for r in report.results)
+        # the deleted file's rows were NOT resurrected: no committed
+        # compacted file in part1 counts it among its inputs
+        for r in report.results:
+            assert all(f.path != victim.path for f in r.task.inputs)
+
+    def test_table_scope_after_partition_scope_replans(self, plan_counter):
+        t = make_table(n_parts=3)
+        cands = [Candidate(table=t, scope=Scope.PARTITION, partition="part0"),
+                 Candidate(table=t, scope=Scope.TABLE)]
+        report = act.Scheduler(target_file_bytes=64 * MB).execute(cands)
+        assert all(r.success for r in report.results), \
+            [r.error for r in report.results]
+        assert plan_counter["n"] == 2    # dirtied part0 forces the replan
+        assert t.file_count() == 3       # every partition compacted once
+
+    def test_repeated_partition_candidate_replans(self, plan_counter):
+        t = make_table(n_parts=2)
+        cands = [Candidate(table=t, scope=Scope.PARTITION, partition="part0"),
+                 Candidate(table=t, scope=Scope.PARTITION, partition="part0")]
+        report = act.Scheduler(target_file_bytes=64 * MB).execute(cands)
+        assert plan_counter["n"] == 2
+        # first run compacts part0; rerun finds a single well-sized file
+        # there and correctly plans nothing for it
+        assert report.results and report.results[0].success
+        assert len(report.results) == 1
+
+    def test_distinct_partitions_untouched_by_dirtying(self, plan_counter):
+        t = make_table(n_parts=4)
+        cands = [Candidate(table=t, scope=Scope.PARTITION,
+                           partition=f"part{p}") for p in range(4)]
+        report = act.Scheduler(target_file_bytes=64 * MB).execute(cands)
+        assert plan_counter["n"] == 1    # still one plan for the clean case
+        assert all(r.success for r in report.results)

@@ -65,3 +65,50 @@ class TestCompressedPsum:
         out, err = compressed_psum(x, None, None, block=16)
         assert out.dtype == jnp.bfloat16 and out.shape == (4, 32)
         assert err.dtype == jnp.float32
+
+
+class TestCacheStreamQuantizers:
+    """Seq-axis blockwise quantization — the disagg cache-stream wire
+    format (quantize on the prefill mesh, dequantize on arrival)."""
+
+    def test_seqaxis_roundtrip_error_bound(self):
+        from repro.dist.collectives import (dequantize_int8_seqaxis,
+                                            quantize_int8_seqaxis)
+        rng = np.random.RandomState(7)
+        x = jnp.asarray(rng.randn(3, 8, 512, 2, 16), jnp.float32)  # seq=dim2
+        q, s = quantize_int8_seqaxis(x, 2, block=256)
+        assert q.dtype == jnp.int8 and q.shape == (3, 8, 2, 16, 512)
+        assert s.shape == (3, 8, 2, 16, 2)          # 512 / 256 blocks
+        out = dequantize_int8_seqaxis(q, s, 2)
+        assert out.shape == x.shape
+        # error <= half a quantization step of each block's abs-max
+        step = jnp.moveaxis(jnp.repeat(s, 256, axis=-1), -1, 2)
+        assert float(jnp.max(jnp.abs(out - x) - step / 2)) <= 1e-6
+
+    def test_lastdim_blocks_fallback(self):
+        from repro.dist.collectives import lastdim_blocks
+        assert lastdim_blocks(512, 256) == (256, 2)
+        assert lastdim_blocks(48, 256) == (48, 1)   # non-divisible: one block
+
+    def test_stream_int8_identity_out_of_context(self):
+        """Outside axis_rules, stream_int8 is pure quantize->dequantize:
+        same values the real two-mesh transfer delivers."""
+        from repro.dist.collectives import (dequantize_int8_seqaxis,
+                                            quantize_int8_seqaxis,
+                                            stream_int8)
+        rng = np.random.RandomState(8)
+        x = jnp.asarray(rng.randn(2, 64, 4), jnp.bfloat16)
+        out = stream_int8(x, "batch", "kv_seq", None, seq_axis=1, block=32)
+        assert out.dtype == x.dtype and out.shape == x.shape
+        ref = dequantize_int8_seqaxis(
+            *quantize_int8_seqaxis(x, 1, block=32), 1).astype(x.dtype)
+        assert (out == ref).all()
+
+    def test_all_gather_int8_passes_s8_through(self):
+        """An int8-resident cache leaf must not be re-quantized by the
+        int8 act transport — it crosses as-is."""
+        from repro.dist.collectives import all_gather_int8
+        q = jnp.asarray(np.arange(-8, 8, dtype=np.int8).reshape(4, 4))
+        out = all_gather_int8(q, "batch", None)
+        assert out.dtype == jnp.int8
+        assert (out == q).all()

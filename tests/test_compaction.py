@@ -102,3 +102,49 @@ class TestExecution:
             assert comp.execute_task(t, task).success
         freed = t.expire_snapshots(keep_last=1)
         assert freed > 0
+
+
+class TestAtomicAccounting:
+    """execute_tasks_atomic must count (and physically delete) only the
+    inputs ITS commit replaced — not credit concurrent writers' deletions
+    to compaction, and not delete blobs of inputs that were already dead
+    at commit time (execute_task's len(live_inputs) semantics)."""
+
+    def test_concurrent_delete_not_credited_to_compaction(self):
+        _, t, store = make_table("table")
+        files = add_files(t, 12)
+        dead = files[0]
+        done = {"hit": False}
+
+        def delete_one_input(table, _task):
+            if not done["hit"]:
+                done["hit"] = True
+                table.delete_files([dead])
+
+        tasks = comp.plan_table(t, target_bytes=64 * MB)
+        n_inputs = sum(len(task.inputs) for task in tasks)
+        assert any(f.path == dead.path
+                   for task in tasks for f in task.inputs)
+        res = comp.execute_tasks_atomic(t, tasks,
+                                        interleave_fn=delete_one_input)
+        assert res.success
+        # the concurrently-deleted input is NOT compaction's removal...
+        assert res.files_removed == n_inputs - 1
+        # ...nor compaction's blob to clean: the deleting writer (or
+        # snapshot expiry) owns that file's physical lifecycle
+        assert store.exists(dead.path)
+        # the inputs our commit replaced ARE cleaned up
+        for task in tasks:
+            for f in task.inputs:
+                if f.path != dead.path:
+                    assert not store.exists(f.path)
+
+    def test_files_removed_equals_live_inputs(self):
+        """No concurrency: every planned input is live, counted, deleted."""
+        _, t, _ = make_table()
+        add_files(t, 12)
+        tasks = comp.plan_table(t, target_bytes=64 * MB)
+        res = comp.execute_tasks_atomic(t, tasks)
+        assert res.success
+        assert res.files_removed == sum(len(task.inputs) for task in tasks)
+        assert res.bytes_rewritten == sum(task.input_bytes for task in tasks)

@@ -155,3 +155,46 @@ class TestFailureHygiene:
         assert store.list(f"{t.table_id}/data/compacted-") == []
         for f in t.current_files():   # original files untouched
             assert store.exists(f.path)
+
+
+class TestSnapshotMetadataDeterminism:
+    """Snapshot IDs were allocated from a module-global itertools.count
+    shared by every table in the process, so identical catalog states got
+    different snapshot IDs / manifest paths depending on what else had
+    committed first — the same NFR2 violation once fixed for task IDs.
+    IDs are now per-table, seeded from the table's own metadata."""
+
+    @staticmethod
+    def _run_once():
+        t, store = make_table()
+        tasks = comp.plan_table(t, target_bytes=64 * MB)
+        res = comp.execute_tasks_atomic(t, tasks)
+        assert res.success
+        return t, store
+
+    def test_identical_runs_serialize_identical_metadata(self):
+        t1, _ = self._run_once()
+        t2, _ = self._run_once()
+        assert t1.meta.serialize() == t2.meta.serialize()
+
+    def test_other_tables_do_not_perturb_snapshot_ids(self):
+        """Interleaving commits to an unrelated table must not shift this
+        table's IDs (the failure mode of the global counter)."""
+        t1, _ = self._run_once()
+        noise, _ = make_table()          # burns IDs under a global counter
+        for _ in range(3):
+            noise.append([])
+        t2, _ = self._run_once()
+        assert t1.meta.serialize() == t2.meta.serialize()
+
+    def test_manifest_paths_identical_across_runs(self):
+        t1, s1 = self._run_once()
+        t2, s2 = self._run_once()
+        m1 = sorted(p for p in s1.list(f"{t1.table_id}/metadata/"))
+        m2 = sorted(p for p in s2.list(f"{t2.table_id}/metadata/"))
+        assert m1 == m2
+
+    def test_snapshot_ids_seeded_from_metadata(self):
+        t, _ = self._run_once()
+        ids = [s.snapshot_id for s in t.meta.snapshots]
+        assert ids == list(range(1, len(ids) + 1))

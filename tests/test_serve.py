@@ -123,3 +123,113 @@ class TestSampling:
         a = generate(cfg, params, prompts, max_new=8, temperature=2.0, seed=0)
         b = generate(cfg, params, prompts, max_new=8, temperature=2.0, seed=1)
         assert (a != b).any()
+
+
+class TestServeArgs:
+    """--smoke was action="store_true" with default=True — impossible to
+    disable, so the full-config branch was dead code. It is now --full."""
+
+    def test_default_serves_smoke_config(self):
+        from repro.launch.serve import build_parser, resolve_config
+        args = build_parser().parse_args(["--arch", "granite-3-8b"])
+        assert args.full is False
+        cfg = resolve_config(args)
+        assert cfg.name.endswith("-smoke")
+
+    def test_full_flag_serves_published_config(self):
+        from repro.configs import get_config
+        from repro.launch.serve import build_parser, resolve_config
+        args = build_parser().parse_args(["--arch", "granite-3-8b", "--full"])
+        assert args.full is True
+        cfg = resolve_config(args)
+        assert cfg == get_config("granite-3-8b")
+        assert not cfg.name.endswith("-smoke")
+
+    def test_disagg_flags_parse(self):
+        from repro.launch.serve import build_parser
+        args = build_parser().parse_args(
+            ["--disagg", "--cache-transfer", "int8", "--kv-storage", "int8"])
+        assert args.disagg and args.cache_transfer == "int8" \
+            and args.kv_storage == "int8"
+
+
+class TestKVStorageInt8:
+    """int8-resident decode cache, single-device (the sharded/transfer
+    claims live in tests/test_serve_disagg.py)."""
+
+    @pytest.mark.parametrize("arch", ["paper-lm-100m", "minicpm3-4b"])
+    def test_int8_storage_logits_match_bf16(self, arch):
+        cfg = smoke_config(arch)
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        b, s0, total = 2, 8, 16
+        prompts = _prompts(cfg, b, s0, seed=13)
+        prefill = jax.jit(step_lib.make_prefill_step(cfg))
+        logits0, cache = prefill(params, {"tokens": jnp.asarray(prompts)})
+        cache = grow_cache(cache, transformer.abstract_cache(cfg, b, total))
+        tok = jnp.argmax(logits0, -1).astype(jnp.int32)[:, None]
+        batch = {"tokens": tok, "pos": jnp.asarray(s0, jnp.int32)}
+        out = {}
+        for storage in ("bf16", "int8"):
+            c = cache
+            if storage == "int8":
+                c = transformer.quantize_cache_int8(cache)
+            fn = jax.jit(step_lib.make_decode_step(cfg, total, "bf16",
+                                                   storage))
+            lg, new_c = fn(params, c, batch)
+            # the step emits the same storage layout it consumed
+            assert jax.tree.structure(new_c) == jax.tree.structure(c)
+            out[storage] = np.asarray(lg, np.float32)
+        scale = max(np.abs(out["bf16"]).max(), 1.0)
+        assert np.abs(out["bf16"] - out["int8"]).max() / scale < 0.05
+
+    def test_int8_storage_generate_tracks_bf16_tokens(self, dense):
+        cfg, params = dense
+        prompts = _prompts(cfg, 3, 10, seed=17)
+        base = generate(cfg, params, prompts, max_new=8)
+        quant = generate(cfg, params, prompts, max_new=8, kv_storage="int8")
+        rows_equal = (base == quant).all(axis=1)
+        assert rows_equal.mean() >= 0.5, (base, quant)
+
+    def test_int8_storage_cache_layout(self):
+        cfg = smoke_config("paper-lm-100m")
+        struct = transformer.cache_struct(cfg, 2, 16, kv_storage="int8")
+        assert "k_scale" in struct and "v_scale" in struct
+        abs_c = transformer.abstract_cache(cfg, 2, 16, kv_storage="int8")
+        assert abs_c["k"].dtype == jnp.int8
+        assert abs_c["k_scale"].dtype == jnp.float32
+        assert abs_c["k_scale"].shape[:-1] == abs_c["k"].shape[:-1]
+
+    @pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-125m"])
+    def test_recurrent_families_refuse_int8_storage(self, arch):
+        cfg = smoke_config(arch)
+        with pytest.raises(NotImplementedError, match="kv_storage"):
+            step_lib.make_decode_step(cfg, 16, "bf16", "int8")
+
+
+class TestDisaggActTransport:
+    def test_serve_decode_half_drops_int8_act_transport(self, monkeypatch):
+        """Under the serve_decode preset the decode cache is resident (no
+        per-step gather), so an int8 act transport would just round the
+        whole cache through s8 every step for zero wire saved — generate
+        must build the decode step with bf16 transport instead."""
+        from repro.dist import sharding as shd
+        from repro.launch import serve
+        seen = {}
+        real = step_lib.make_decode_step
+
+        def spy(cfg, total, act_transport="bf16", kv_storage="bf16"):
+            seen["act"] = act_transport
+            return real(cfg, total, act_transport, kv_storage)
+
+        monkeypatch.setattr(serve.step_lib, "make_decode_step", spy)
+        cfg = smoke_config("paper-lm-100m")
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        pre, dec = serve.make_disagg_meshes(cfg)
+        serve.generate(cfg, params, _prompts(cfg, 2, 8), max_new=2,
+                       mesh=pre, decode_mesh=dec, act_transport="int8")
+        assert seen["act"] == "bf16"
+        # custom decode rules keep the caller's transport choice
+        serve.generate(cfg, params, _prompts(cfg, 2, 8), max_new=2,
+                       mesh=pre, decode_mesh=dec, act_transport="int8",
+                       decode_rules=shd.PRESETS["serve_sp"])
+        assert seen["act"] == "int8"

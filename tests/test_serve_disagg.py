@@ -1,0 +1,210 @@
+"""Disaggregated prefill/decode serving on a real multi-device mesh — the
+CI ``multidevice`` job runs this under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Prefill compiles sequence-parallel (``serve_sp``) on its own mesh, decode
+batch-heavy (``serve_decode``) on a disjoint mesh, and the KV cache is
+handed off between them — raw bf16 or as a seq-blockwise int8 stream
+(``--cache-transfer``), with an orthogonal int8-*resident* storage arm
+(``--kv-storage``). Assertions mirror the acceptance criteria: resolved
+decode-side shardings, s8 on the transfer wire (< bf16/1.5, HLO-parsed),
+token-for-token colocated-vs-disaggregated equivalence for the bf16
+stream, logit tolerance for int8 storage, and all four transfer x storage
+dryrun combinations. Skipped below 8 devices."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import smoke_config
+from repro.dist import sharding as shd
+from repro.launch import analysis
+from repro.launch import serve
+from repro.models import transformer
+from repro.train import step as step_lib
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+BATCH, TOTAL = 8, 512
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_config("paper-lm-100m")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    """The colocated (4, 2) mesh of the acceptance criteria."""
+    return jax.make_mesh((4, 2), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def disagg_meshes(cfg):
+    return serve.make_disagg_meshes(cfg)
+
+
+@pytest.fixture(scope="module")
+def setup(cfg):
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(0, cfg.vocab, size=(8, 16)).astype(np.int32)
+    lens = rng.randint(8, 17, size=(8,)).astype(np.int32)
+    return params, prompts, lens
+
+
+class TestDisaggMeshes:
+    def test_meshes_are_disjoint_halves(self, disagg_meshes):
+        pre, dec = disagg_meshes
+        pre_ids = {d.id for d in pre.devices.flat}
+        dec_ids = {d.id for d in dec.devices.flat}
+        assert pre_ids.isdisjoint(dec_ids)
+        assert len(pre_ids) == len(dec_ids) == jax.device_count() // 2
+
+    def test_serve_decode_cache_resident_not_seq_sharded(self, cfg,
+                                                         disagg_meshes):
+        """serve_decode: batch -> data, sequence REPLICATED (no per-step
+        cache gather) — read back from committed arrays."""
+        _, dec = disagg_meshes
+        rules = shd.PRESETS["serve_decode"]
+        cache = transformer.init_cache(cfg, BATCH, TOTAL)
+        shards = shd.tree_shardings(
+            transformer.abstract_cache(cfg, BATCH, TOTAL),
+            transformer.cache_axes(cfg, BATCH, TOTAL), dec, rules)
+        placed = jax.device_put(cache, shards)
+        data = dec.shape["data"]
+        for name in ("k", "v"):
+            leaf = placed[name]          # (layers, B, S, Hkv, hd)
+            assert leaf.sharding.spec == P(None, "data")
+            local = leaf.addressable_shards[0].data
+            # full sequence resident per batch shard
+            assert local.shape[1:3] == (BATCH // data, TOTAL)
+
+
+def _transfer_hlo(cfg, mesh, mode):
+    c_abs = transformer.abstract_cache(cfg, BATCH, TOTAL)
+    c_axes = transformer.cache_axes(cfg, BATCH, TOTAL)
+    pre = shd.tree_shardings(c_abs, c_axes, mesh, shd.PRESETS["serve_sp"])
+    dec = shd.tree_shardings(c_abs, c_axes, mesh,
+                             shd.PRESETS["serve_decode"])
+    fn = serve.make_cache_transfer_step(cfg, BATCH, TOTAL, mode)
+    with shd.axis_rules(mesh, shd.PRESETS["serve_decode"]):
+        return jax.jit(fn, in_shardings=(pre,), out_shardings=dec
+                       ).lower(c_abs).compile().as_text()
+
+
+class TestCacheStreamWire:
+    """The transfer acceptance gate: the serve_sp -> serve_decode cache
+    reshard moves s8 under the int8 stream, < 1/1.5 the bf16 wire."""
+
+    @pytest.fixture(scope="class")
+    def coll(self, cfg, mesh):
+        return {t: analysis.hlo_collective_bytes(_transfer_hlo(cfg, mesh, t))
+                for t in ("bf16", "int8")}
+
+    def test_bf16_transfer_reshards_and_moves_no_s8(self, coll):
+        assert coll["bf16"]["total_wire_bytes_bf16eq"] > 0
+        assert coll["bf16"]["total_wire_bytes_bf16eq_s8"] == 0
+
+    def test_int8_transfer_wire_is_mostly_s8(self, coll):
+        s8 = coll["int8"]["total_wire_bytes_bf16eq_s8"]
+        assert s8 > 0
+        assert s8 > coll["int8"]["total_wire_bytes_bf16eq"] / 2
+
+    def test_int8_transfer_below_bf16_over_1p5(self, coll):
+        wire = {t: c["total_wire_bytes_bf16eq"] for t, c in coll.items()}
+        assert wire["int8"] <= wire["bf16"] / 1.5, wire
+
+
+class TestDisaggEquivalence:
+    def test_bf16_stream_token_identical_to_colocated(self, cfg, mesh,
+                                                      disagg_meshes, setup):
+        """The acceptance criterion: splitting prefill/decode onto
+        separate meshes (bf16 handoff) must not flip a single greedy
+        token vs colocated serve_sp serving."""
+        params, prompts, lens = setup
+        pre, dec = disagg_meshes
+        colo = serve.generate(cfg, params, prompts, max_new=12,
+                              prompt_lens=lens, mesh=mesh)
+        dis = serve.generate(cfg, params, prompts, max_new=12,
+                             prompt_lens=lens, mesh=pre, decode_mesh=dec)
+        assert (colo == dis).all(), (colo, dis)
+
+    def test_int8_stream_int8_storage_tracks_bf16(self, cfg, disagg_meshes,
+                                                  setup):
+        """The fully quantized pipeline (s8 handoff + s8-resident cache)
+        is lossy; on the smoke config it must still agree on (almost)
+        every row with the bf16 pipeline."""
+        params, prompts, lens = setup
+        pre, dec = disagg_meshes
+        base = serve.generate(cfg, params, prompts, max_new=12,
+                              prompt_lens=lens, mesh=pre, decode_mesh=dec)
+        quant = serve.generate(cfg, params, prompts, max_new=12,
+                               prompt_lens=lens, mesh=pre, decode_mesh=dec,
+                               cache_transfer="int8", kv_storage="int8")
+        rows_equal = (base == quant).all(axis=1)
+        assert rows_equal.mean() >= 0.5, (base, quant)
+
+
+class TestInt8StorageLogits:
+    def test_int8_storage_matches_bf16_logits(self, cfg, mesh):
+        """kv_storage="int8" decode matches the bf16-resident decode's
+        logits within quantization tolerance, on the decode mesh."""
+        params = transformer.init_params(cfg, jax.random.PRNGKey(1))
+        b, s0, total = 8, 16, 32
+        rules = shd.PRESETS["serve_decode"]
+        prompts = np.random.RandomState(1).randint(
+            0, cfg.vocab, size=(b, s0)).astype(np.int32)
+        with shd.axis_rules(mesh, rules):
+            p_shard = shd.tree_shardings(transformer.abstract_params(cfg),
+                                         transformer.param_axes(cfg),
+                                         mesh, rules)
+            placed = jax.device_put(params, p_shard)
+            _, cache = jax.jit(step_lib.make_prefill_step(cfg))(
+                placed, {"tokens": jnp.asarray(prompts)})
+            cache = serve.grow_cache(
+                cache, transformer.abstract_cache(cfg, b, total))
+            tok = jnp.full((b, 1), 7, jnp.int32)
+            batch = {"tokens": tok, "pos": jnp.asarray(s0, jnp.int32)}
+            logits = {}
+            for storage in ("bf16", "int8"):
+                c = cache
+                if storage == "int8":
+                    c = jax.jit(transformer.quantize_cache_int8)(cache)
+                fn = step_lib.make_decode_step(cfg, total, "bf16", storage)
+                lg, _ = jax.jit(fn)(placed, c, batch)
+                logits[storage] = np.asarray(lg, np.float32)
+        diff = np.abs(logits["bf16"] - logits["int8"]).max()
+        scale = max(np.abs(logits["bf16"]).max(), 1.0)
+        assert diff / scale < 0.05, diff
+        agree = (logits["bf16"].argmax(-1) == logits["int8"].argmax(-1))
+        assert agree.mean() >= 0.9
+
+
+class TestDisaggDryrunReport:
+    @pytest.fixture(scope="class")
+    def report(self, cfg, mesh):
+        return serve.disagg_decode_report(cfg, BATCH, TOTAL, mesh)
+
+    def test_all_four_combinations_reported(self, report):
+        assert set(report["cells"]) == {"bf16xbf16", "bf16xint8",
+                                        "int8xbf16", "int8xint8"}
+        assert report["unsupported_storage"] == []
+        for cell in report["cells"].values():
+            assert cell["collective_s"] >= 0
+            assert cell["cache_resident_bytes_per_device"] > 0
+
+    def test_int8_storage_shrinks_resident_bytes(self, report):
+        cells = report["cells"]
+        assert cells["bf16xint8"]["cache_resident_bytes_per_device"] \
+            < cells["bf16xbf16"]["cache_resident_bytes_per_device"]
+
+    def test_int8_transfer_shrinks_transfer_wire(self, report):
+        cells = report["cells"]
+        assert cells["int8xbf16"]["transfer_wire_bytes_bf16eq"] \
+            <= cells["bf16xbf16"]["transfer_wire_bytes_bf16eq"] / 1.5
+        assert cells["int8xbf16"]["transfer_wire_bytes_bf16eq_s8"] > 0
