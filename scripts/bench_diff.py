@@ -11,10 +11,13 @@ the last successful main run and calls::
 Cells are matched by (arch, shape, mesh, preset, grad_transport,
 act_transport). A cell regresses when a lower-is-better metric
 (``collective_s``) grows, or a higher-is-better metric
-(``roofline_fraction``) shrinks, by more than ``--threshold`` (default
-15%). A missing/unreadable baseline is tolerated (first run, expired
-artifact): the gate passes with a note. Cells present on only one side are
-reported but never fail the gate — sweeps legitimately grow.
+(``roofline_fraction``, ``slot_stream_overlap_frac_*``) shrinks, by more
+than ``--threshold`` (default 15%). A missing/unreadable baseline is
+tolerated (first run, expired artifact): the gate passes with a note.
+Cells present on only one side are reported but never fail the gate —
+sweeps legitimately grow. A gated METRIC the baseline cell has but the
+current cell lost, however, FAILS: a renamed roofline key must not
+silently stop being gated.
 """
 
 from __future__ import annotations
@@ -30,20 +33,36 @@ from typing import Any, Dict, List, Optional, Tuple
 METRICS: Dict[str, str] = {
     "collective_s": "lower",
     "roofline_fraction": "higher",
-    # disaggregated-decode design space (decode cells only; missing in
-    # either record => skipped, so pre-disagg baselines stay comparable).
-    # The per-batch transfer and per-token decode-step components are
-    # gated individually: the combo sum is transfer-dominated, so a large
-    # decode-step regression would hide inside it.
-    "disagg_collective_s_bf16xbf16": "lower",
-    "disagg_collective_s_bf16xint8": "lower",
-    "disagg_collective_s_int8xbf16": "lower",
-    "disagg_collective_s_int8xint8": "lower",
-    "disagg_transfer_s_bf16": "lower",
-    "disagg_transfer_s_int8": "lower",
-    "disagg_decode_step_s_bf16": "lower",
-    "disagg_decode_step_s_int8": "lower",
 }
+
+# Disaggregated-decode design space (decode cells only; a metric missing
+# from BOTH records => skipped, so pre-disagg baselines stay comparable —
+# but a metric the baseline HAS that the current record LOST fails the
+# gate: a renamed roofline key must not silently stop being gated).
+# The per-batch transfer and per-token decode-step components are gated
+# individually: the combo sum is transfer-dominated, so a large
+# decode-step regression would hide inside it. slot_stream_* are the
+# continuous-streaming keys: per-slot wire bytes / transfer time (lower)
+# and the double-buffer overlap efficiency (higher — the fraction of a
+# slot transfer hidden behind decode steps). Note the overlap frac is a
+# RATIO of two gated quantities (hide_steps * decode_step_s /
+# slot_transfer_s), so a deliberate >threshold improvement in decode-step
+# wire also shrinks it and trips this gate — by design: less decode time
+# genuinely hides less transfer, and a PR that changes that trade-off
+# must say so (and refresh the baseline by landing) rather than slip by.
+_TRANSFERS = ("bf16", "int8")
+_STORAGES = ("bf16", "int8", "f8")
+for _t in _TRANSFERS:
+    METRICS[f"disagg_transfer_s_{_t}"] = "lower"
+    METRICS[f"slot_stream_transfer_s_{_t}"] = "lower"
+    METRICS[f"slot_stream_wire_bytes_{_t}"] = "lower"
+for _s in _STORAGES:
+    METRICS[f"disagg_decode_step_s_{_s}"] = "lower"
+for _t in _TRANSFERS:
+    for _s in _STORAGES:
+        METRICS[f"disagg_collective_s_{_t}x{_s}"] = "lower"
+        METRICS[f"slot_stream_overlap_frac_{_t}x{_s}"] = "higher"
+METRICS["disagg_tuned_collective_s"] = "lower"
 
 DEFAULT_THRESHOLD = 0.15
 
@@ -67,16 +86,22 @@ def diff_trajectories(current: List[Dict[str, Any]],
                       threshold: float = DEFAULT_THRESHOLD,
                       metrics: Optional[Dict[str, str]] = None
                       ) -> Dict[str, Any]:
-    """Compare two record lists; returns {regressions, compared, only_*}.
+    """Compare two record lists; returns {regressions, missing_metrics,
+    compared, only_*}.
 
     Each regression is ``{key, metric, baseline, current, change}`` with
     ``change`` the signed relative move in the bad direction (e.g. +0.30
-    for a 30% collective_s growth).
+    for a 30% collective_s growth). ``missing_metrics`` lists gated
+    metrics the baseline cell HAS but the current cell LOST — a renamed
+    or dropped roofline key must fail loudly, not silently stop being
+    gated (metrics absent from both sides stay skipped, so old baselines
+    remain comparable as the key set grows).
     """
     metrics = METRICS if metrics is None else metrics
     cur = _ok_cells(current)
     base = _ok_cells(baseline)
     regressions: List[Dict[str, Any]] = []
+    missing: List[Dict[str, Any]] = []
     compared = 0
     for key, crec in cur.items():
         brec = base.get(key)
@@ -86,8 +111,13 @@ def diff_trajectories(current: List[Dict[str, Any]],
         for metric, direction in metrics.items():
             cval = crec["roofline"].get(metric)
             bval = brec["roofline"].get(metric)
-            if not isinstance(cval, (int, float)) \
-                    or not isinstance(bval, (int, float)) or bval == 0:
+            if not isinstance(bval, (int, float)):
+                continue
+            if not isinstance(cval, (int, float)):
+                missing.append({"key": key, "metric": metric,
+                                "baseline": bval})
+                continue
+            if bval == 0:
                 continue
             rel = (cval - bval) / abs(bval)
             bad = rel if direction == "lower" else -rel
@@ -99,6 +129,7 @@ def diff_trajectories(current: List[Dict[str, Any]],
                 })
     return {
         "regressions": regressions,
+        "missing_metrics": missing,
         "compared": compared,
         "only_current": sorted(str(k) for k in cur.keys() - base.keys()),
         "only_baseline": sorted(str(k) for k in base.keys() - cur.keys()),
@@ -149,14 +180,19 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"  new cell (not gated): {k}")
     for k in res["only_baseline"]:
         print(f"  dropped cell (not gated): {k}")
-    if not res["regressions"]:
+    for m in res["missing_metrics"]:
+        print(f"  MISSING {m['key']}: gated metric {m['metric']!r} "
+              f"(baseline {m['baseline']:.6g}) disappeared from the fresh "
+              "artifact — renamed keys must not silently stop being gated")
+    if not res["regressions"] and not res["missing_metrics"]:
         print("[bench-diff] OK: no regression beyond threshold")
         return 0
     for r in res["regressions"]:
         print(f"  REGRESSION {r['key']}: {r['metric']} "
               f"{r['baseline']:.6g} -> {r['current']:.6g} "
               f"({r['change']:+.1%} in the bad direction)")
-    print(f"[bench-diff] FAIL: {len(res['regressions'])} regression(s)")
+    print(f"[bench-diff] FAIL: {len(res['regressions'])} regression(s), "
+          f"{len(res['missing_metrics'])} disappeared metric(s)")
     return 1
 
 

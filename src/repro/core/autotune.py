@@ -4,7 +4,10 @@ thresholds against an end-to-end workload objective.
 The paper uses MLOS+FLAML; this is a dependency-free deterministic stand-in
 with the same interface: propose -> evaluate(threshold) -> observe duration.
 Strategy: coarse grid sweep, then successive halving around the incumbent
-(golden-section-flavored local refinement).
+(golden-section-flavored local refinement). :func:`tune_design` extends the
+same propose/evaluate/observe loop to *discrete* design spaces (the serve
+path's cache-transfer x kv-storage x stream-block sweep) via memoized
+coordinate-descent hillclimbing.
 """
 
 from __future__ import annotations
@@ -55,6 +58,66 @@ def tune_threshold(evaluate: Callable[[float], float],
                     best_s, best_x = s, cand
     return TuneResult(history=history, best_threshold=best_x,
                       best_objective=sign * best_s, iterations=len(history))
+
+
+@dataclasses.dataclass
+class DesignResult:
+    history: List[Tuple[Dict[str, object], float]]   # (point, objective)
+    best_point: Dict[str, object]
+    best_objective: float
+    evaluations: int
+    rounds: int
+
+
+def tune_design(evaluate: Callable[[Dict[str, object]], float],
+                axes: Dict[str, Sequence],
+                minimize: bool = True,
+                max_rounds: int = 8) -> DesignResult:
+    """Coordinate-descent hillclimb over a *discrete* design space.
+
+    ``axes`` maps each knob to its ordered candidate values (e.g.
+    ``{"cache_transfer": ("bf16", "int8"), "kv_storage": ("bf16", "int8",
+    "f8"), "block": (128, 256, 512)}`` — the serve-path transfer x storage
+    x block space the dryrun sweeps). Starting from the first value of
+    every axis, each round walks the axes in declaration order and moves
+    one coordinate at a time to its best value with the others held fixed;
+    the climb stops at the first round that moves nothing. Deterministic
+    (axis and value order fix the walk) and memoized, so a point is never
+    evaluated twice — with N axes of k values each, at most 1 + rounds *
+    N * (k - 1) evaluations instead of k**N.
+    """
+    sign = 1.0 if minimize else -1.0
+    history: List[Tuple[Dict[str, object], float]] = []
+    memo: Dict[Tuple, float] = {}
+
+    def ev(point: Dict[str, object]) -> float:
+        key = tuple(point[a] for a in axes)
+        if key not in memo:
+            y = evaluate(dict(point))
+            memo[key] = sign * y
+            history.append((dict(point), y))
+        return memo[key]
+
+    best = {a: vals[0] for a, vals in axes.items()}
+    best_s = ev(best)
+    rounds = 0
+    for _ in range(max_rounds):
+        rounds += 1
+        moved = False
+        for axis, vals in axes.items():
+            for cand in vals:
+                if cand == best[axis]:
+                    continue
+                point = {**best, axis: cand}
+                s = ev(point)
+                if s < best_s:
+                    best, best_s = point, s
+                    moved = True
+        if not moved:
+            break
+    return DesignResult(history=history, best_point=best,
+                        best_objective=sign * best_s,
+                        evaluations=len(history), rounds=rounds)
 
 
 def tune_weights(evaluate: Callable[[Dict[str, float]], float],

@@ -146,9 +146,32 @@ ACT_BLOCK = 256
 
 # Disaggregated serving knobs (see "Disaggregated serving" in dist/README.md):
 # the prefill->decode cache handoff wire format, and the decode-resident
-# cache storage dtype. Orthogonal axes — 4 combinations.
+# cache storage dtype. Orthogonal axes — transfer x storage combinations.
 CACHE_TRANSFERS = ("bf16", "int8")
-KV_STORAGES = ("bf16", "int8")
+KV_STORAGES = ("bf16", "int8", "f8")
+
+# f8 (e4m3) resident-cache storage: unlike int8, e4m3 carries its own
+# per-element exponent, so the cast is *scale-free* — no `<leaf>_scale`
+# companions, exactly half the bf16 bytes. e4m3fn has no inf encoding
+# (overflow becomes nan), so the cast clips to the finite range first.
+F8_DTYPE = jnp.float8_e4m3fn
+F8_MAX = 448.0
+
+
+def cast_f8(x: jnp.ndarray) -> jnp.ndarray:
+    """Scale-free blockwise-safe cast to e4m3: values are clipped to the
+    f8 finite range (e4m3fn saturates to nan, not inf) and cast. Blocks
+    never interact — every element rounds independently — so the cast is
+    local under any sharding and a slot-row write touches only its own
+    bytes. Pair with :func:`uncast_f8` at read time."""
+    return jnp.clip(x.astype(jnp.float32), -F8_MAX, F8_MAX).astype(F8_DTYPE)
+
+
+def uncast_f8(q: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of :func:`cast_f8` (exact: every f8 value is representable
+    in f32/bf16). ``decode_attention`` calls this per read — the XLA path
+    upcasts the whole operand; the Pallas kernel upcasts per K/V tile."""
+    return q.astype(dtype)
 
 
 def lastdim_blocks(d: int, block: int = ACT_BLOCK) -> Tuple[int, int]:
@@ -236,6 +259,28 @@ def stream_int8(x: jnp.ndarray, *logical_axes: Optional[str],
     return dequantize_int8_seqaxis(q, scales, seq_axis).astype(x.dtype)
 
 
+def stream_slot_int8(cache_leaf: jnp.ndarray, new_slice: jnp.ndarray, slot,
+                     *logical_axes: Optional[str], seq_axis: int,
+                     batch_axis: int = 1, block: int = ACT_BLOCK
+                     ) -> jnp.ndarray:
+    """Per-slot variant of :func:`stream_int8` — the continuous-streaming
+    admission primitive: quantize ONE request's ``[..., 1, ..., seq, ...]``
+    cache slice seq-blockwise, ship the s8 chunks + f32 scales (constrained
+    to the slot-row target layout so a cross-layout reshard carries s8,
+    not the raw slice), dequantize, and write the arrived slice into row
+    ``slot`` along ``batch_axis`` of the *running* decode cache leaf.
+
+    ``logical_axes`` names the slice's target layout (its batch dim is 1,
+    so the batch rule never actually shards it — the slot row's home
+    device set receives the whole slice); ``slot`` may be a traced scalar,
+    so one compiled admission program serves every slot."""
+    arrived = stream_int8(new_slice, *logical_axes, seq_axis=seq_axis,
+                          block=block).astype(cache_leaf.dtype)
+    start = [jnp.zeros((), jnp.int32)] * cache_leaf.ndim
+    start[batch_axis] = jnp.asarray(slot, jnp.int32)
+    return jax.lax.dynamic_update_slice(cache_leaf, arrived, tuple(start))
+
+
 class _TraceScope(threading.local):
     """Thread-local trace-time value stack — the shared machinery behind
     the serve-path knobs (activation transport, KV storage). ``None``
@@ -298,11 +343,12 @@ def all_gather_int8(x: jnp.ndarray, *logical_axes: Optional[str],
     target layout so XLA's resharding all-gather carries s8, dequantize on
     the gathered side. ~(1 + 4/block)/2 of the bf16 wire bytes.
 
-    An already-int8 payload (an int8-resident KV cache under
-    ``kv_storage="int8"``) passes through as a plain constrained reshard:
-    it is as small as this transport could make it, and re-quantizing s8
-    values through a fresh abs-max scale would just add rounding error."""
-    if x.dtype == jnp.int8:
+    An already-compressed payload — an int8- or f8-resident KV cache under
+    ``kv_storage={"int8","f8"}`` — passes through as a plain constrained
+    reshard: it is as small as this transport could make it, and rounding
+    s8/e4m3 values through a fresh abs-max int8 scale would only add
+    error."""
+    if x.dtype in (jnp.int8, F8_DTYPE):
         return _shd.constrain(x, *logical_axes)
     q, scales = quantize_int8_lastdim(x, block)
     q = _shd.constrain(q, *logical_axes)
@@ -320,10 +366,12 @@ def current_kv_storage() -> str:
 
 def kv_storage_scope(mode: Optional[str]) -> _trace_scope_ctx:
     """Trace-time scope selecting the decode KV cache's *resident* dtype:
-    ``"bf16"`` (the default, full-precision leaves) or ``"int8"`` (each
+    ``"bf16"`` (the default, full-precision leaves), ``"int8"`` (each
     leaf stored as blockwise-int8 values + f32 scales along the trailing
     feature axis; written tokens quantize per-position on the way in and
-    attention dequantizes per-block at read time). Entered by
+    attention dequantizes per-block at read time), or ``"f8"`` (scale-free
+    e4m3 leaves via :func:`cast_f8`; exactly half the bf16 bytes, upcast
+    per block at read time). Entered by
     ``make_decode_step``; attention layers read it through
     :func:`current_kv_storage`. Orthogonal to :func:`act_transport_scope`
     (the storage dtype is what the cache *is*; the transport is how a

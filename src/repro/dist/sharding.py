@@ -76,7 +76,8 @@ _FSDP_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
 _SERVE_SP_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
     (name, ()) if name == "embed" else (name, targets)
     for name, targets in _WEIGHT_RULES) \
-    + (("seq_res", ("model",)), ("kv_seq", ("model",)))
+    + (("seq_res", ("model",)), ("kv_seq", ("model",)),
+       ("slots", ("pod", "data")))
 
 # Disaggregated decode: the batch-heavy layout for a dedicated decode mesh.
 # serve_sp minus the sequence shards — the KV cache stays fully resident
@@ -87,12 +88,17 @@ _SERVE_SP_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
 # the tiny tensor-parallel activation reduction behind the q/o
 # projections (which keep "heads" -> model). The tradeoff vs serve_sp is
 # cache HBM (replicated over model instead of sequence-sharded), which is
-# exactly what the kv_storage="int8" arm halves. Prefill never runs under
-# this preset — it keeps serve_sp on its own compute-bound mesh and hands
-# the cache over as a (quantized) stream.
+# exactly what the kv_storage="int8"/"f8" arms halve. Prefill never runs
+# under this preset — it keeps serve_sp on its own compute-bound mesh and
+# hands the cache over as a (quantized) stream, whole-batch or per slot.
+# "slots" is the slot-table axis of continuous streaming: the decode
+# cache's batch dim doubles as the slot dim, and the admission step
+# (serve.make_slot_admit_step) constrains the written slot rows through
+# this axis — mapped to the same mesh axes the batch occupies, so an
+# admission touches exactly the slot row's home devices.
 _SERVE_DECODE_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
     (name, ()) if name in ("embed", "kv_heads", "kv_lora") else (name, targets)
-    for name, targets in _WEIGHT_RULES)
+    for name, targets in _WEIGHT_RULES) + (("slots", ("pod", "data")),)
 
 # Named rule presets consumed by ``repro.launch.dryrun --preset``.
 PRESETS: Dict[str, Rules] = {

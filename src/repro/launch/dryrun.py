@@ -110,7 +110,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                remat_block: Optional[int] = None,
                capacity_factor: Optional[float] = None,
                grad_transport: str = "bf16",
-               act_transport: str = "bf16") -> Dict[str, Any]:
+               act_transport: str = "bf16",
+               cache_transfers: tuple = ("bf16", "int8"),
+               kv_storages: tuple = ("bf16", "int8"),
+               stream_blocks: tuple = (256,)) -> Dict[str, Any]:
     import dataclasses as _dc
     cfg = get_config(arch)
     if remat_block is not None:
@@ -273,14 +276,20 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         # disaggregated serving design space: per cache_transfer x
         # kv_storage combination, the prefill->decode cache stream's wire
         # + the serve_decode step's wire + the decode mesh's resident
-        # cache bytes (all measured from compiled HLO / resolved layouts)
+        # cache bytes (all measured from compiled HLO / resolved layouts),
+        # plus the per-slot continuous-streaming wire and its modeled
+        # overlap, swept over stream block sizes and hillclimbed
+        # (core.autotune.tune_design) for the cheapest combo
         dkey = (arch, shape_name, multi_pod, cfg.remat_block,
-                cfg.capacity_factor)
+                cfg.capacity_factor, cache_transfers, kv_storages,
+                stream_blocks)
         rep = _DISAGG_MEMO.get(dkey)
         if rep is None:
             t0 = time.time()
             rep = serve_lib.disagg_decode_report(
-                cfg, shape.global_batch, shape.seq_len, mesh, ici_bw=ICI_BW)
+                cfg, shape.global_batch, shape.seq_len, mesh, ici_bw=ICI_BW,
+                hbm_bw=HBM_BW, transfers=cache_transfers,
+                storages=kv_storages, blocks=stream_blocks)
             rep["compile_s"] = round(time.time() - t0, 2)
             _DISAGG_MEMO[dkey] = rep
         rec["disagg"] = rep
@@ -295,6 +304,21 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             rec["roofline"]["disagg_transfer_s_" + t] = cell["transfer_s"]
             rec["roofline"]["disagg_decode_step_s_" + s] = \
                 cell["decode_step_s"]
+            # overlap efficiency of continuous slot streaming: fraction of
+            # a per-slot transfer hidden behind the decode steps that run
+            # while it is double-buffered (higher is better; absent for
+            # families that refuse slot streaming)
+            if "slot_stream_overlap_frac" in cell:
+                rec["roofline"]["slot_stream_overlap_frac_" + name] = \
+                    cell["slot_stream_overlap_frac"]
+        for t, ss in rep["slot_stream"].items():
+            rec["roofline"]["slot_stream_transfer_s_" + t] = \
+                ss["transfer_s"]
+            rec["roofline"]["slot_stream_wire_bytes_" + t] = \
+                ss["wire_bytes_bf16eq"]
+        if rep["tuned"] is not None:
+            rec["roofline"]["disagg_tuned_collective_s"] = \
+                rep["tuned"]["collective_s"]
     rec["status"] = "ok"
     return rec
 
@@ -323,6 +347,21 @@ def main() -> None:
                          "cells; every compiled serve record carries the "
                          "*measured* collective_s bf16-vs-int8 comparison "
                          "(both transports are compiled either way)")
+    ap.add_argument("--cache-transfer", default="bf16,int8",
+                    help="comma list of disagg cache-stream wire formats "
+                         "for decode cells, or 'all' "
+                         f"(known: {','.join(step_lib.CACHE_TRANSFERS)})")
+    ap.add_argument("--kv-storage", default="bf16,int8",
+                    help="comma list of decode-resident cache storage arms "
+                         "for decode cells, or 'all' "
+                         f"(known: {','.join(step_lib.KV_STORAGES)}); the "
+                         "PR-triggered bench-smoke keeps the quick default "
+                         "4-combo sweep, the nightly bench-sweep passes "
+                         "'all' to add the f8 arm")
+    ap.add_argument("--stream-block", default="256",
+                    help="comma list of cache-stream quantization block "
+                         "sizes (positions per s8 chunk) to sweep; the "
+                         "first is the one the combo cells report")
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--remat-block", type=int, default=None)
     ap.add_argument("--capacity-factor", type=float, default=None)
@@ -343,6 +382,26 @@ def main() -> None:
         else [args.grad_transport]
     act_transports = ["bf16", "int8"] if args.act_transport == "both" \
         else [args.act_transport]
+
+    def arm(value: str, known, flag: str) -> tuple:
+        names = list(known) if value == "all" else value.split(",")
+        for n in names:
+            if n not in known:
+                ap.error(f"unknown {flag} {n!r}; known: {list(known)}")
+        return tuple(names)
+
+    args.cache_transfers = arm(args.cache_transfer,
+                               step_lib.CACHE_TRANSFERS, "--cache-transfer")
+    args.kv_storages = arm(args.kv_storage, step_lib.KV_STORAGES,
+                           "--kv-storage")
+    try:
+        args.stream_blocks = tuple(
+            int(b) for b in args.stream_block.split(","))
+    except ValueError:
+        ap.error(f"--stream-block expects comma-separated ints, got "
+                 f"{args.stream_block!r}")
+    if any(b < 1 for b in args.stream_blocks):
+        ap.error("--stream-block sizes must be positive")
     os.makedirs(args.out, exist_ok=True)
 
     failures = 0
@@ -389,7 +448,10 @@ def run_one(args, arch: str, shape: str, mp: bool, preset: str,
                          remat_block=args.remat_block,
                          capacity_factor=args.capacity_factor,
                          grad_transport=transport if is_train else "bf16",
-                         act_transport="bf16" if is_train else transport)
+                         act_transport="bf16" if is_train else transport,
+                         cache_transfers=args.cache_transfers,
+                         kv_storages=args.kv_storages,
+                         stream_blocks=args.stream_blocks)
     except Exception as e:  # a failure here is a bug in the system
         rec = {"arch": arch, "shape": shape,
                "mesh": "2x16x16" if mp else "16x16",

@@ -20,10 +20,21 @@ batch-heavy (``serve_decode``: cache resident, no per-step cache
 collectives) on the other half, and the KV cache is handed off between
 them once per request batch. ``--cache-transfer int8`` quantizes that
 handoff blockwise along the sequence axis (s8 chunks + f32 scales on the
-wire); ``--kv-storage int8`` additionally keeps the decode-resident cache
-int8 (half the HBM), dequantized per block at attention read time. The two
-knobs are orthogonal — 4 combinations, reported per decode dryrun cell
-(``repro.launch.dryrun --shape decode``).
+wire); ``--kv-storage {int8,f8}`` additionally keeps the decode-resident
+cache quantized (~half the HBM: s8 + scales, or scale-free e4m3),
+dequantized/upcast per block at attention read time. The knobs are
+orthogonal — transfer x storage combinations, reported per decode dryrun
+cell (``repro.launch.dryrun --shape decode``).
+
+``--stream slots`` makes the handoff *continuous* (AutoComp's core lesson:
+consolidation work runs concurrently with the serving it feeds, not as
+stop-the-world batches): instead of prefilling a whole batch and handing
+the cache to a fresh decode batch, each finished request's cache slice is
+quantized/shipped/dequantized into a free row of a RUNNING decode batch
+(slot admission), and the next slice's wire transfer is double-buffered
+behind the current decode steps. Slots free as requests finish and are
+reused by pending requests; greedy tokens are identical to the whole-batch
+path.
 
 Continuous batching: requests at different positions share one decode step
 (``prompt_lens`` gives per-row lengths; positions/masks are per-row, so
@@ -68,18 +79,19 @@ def grow_cache(cache, target):
     return jax.tree.map(grow, cache, target)
 
 
-def make_cache_transfer_step(cfg, batch: int, total: int, mode: str):
+def make_cache_transfer_step(cfg, batch: int, total: int, mode: str,
+                             block: int = collectives.ACT_BLOCK):
     """Single-mesh form of the prefill->decode cache handoff.
 
     Returns ``transfer(cache) -> cache`` that reshards every leaf to the
     layout the active ``axis_rules`` context resolves for its logical
     axes; ``mode="int8"`` routes leaves with a sequence axis through
     ``collectives.stream_int8`` (seq-blockwise s8 chunks + scales on the
-    wire), everything else (recurrent state, ``mode="bf16"``) moves raw.
-    jit it with in_shardings = the prefill layout and out_shardings = the
-    decode layout under ``axis_rules(mesh, serve_decode)`` and the
-    compiled HLO is the transfer's wire — what the dryrun and the disagg
-    mesh tests measure.
+    wire, ``block`` positions per chunk), everything else (recurrent
+    state, ``mode="bf16"``) moves raw. jit it with in_shardings = the
+    prefill layout and out_shardings = the decode layout under
+    ``axis_rules(mesh, serve_decode)`` and the compiled HLO is the
+    transfer's wire — what the dryrun and the disagg mesh tests measure.
     """
     if mode not in collectives.CACHE_TRANSFERS:
         raise ValueError(f"unknown cache_transfer {mode!r}; "
@@ -91,57 +103,76 @@ def make_cache_transfer_step(cfg, batch: int, total: int, mode: str):
             la = tuple(la)
             if mode == "int8" and "kv_seq" in la:
                 return collectives.stream_int8(
-                    leaf, *la, seq_axis=la.index("kv_seq"))
+                    leaf, *la, seq_axis=la.index("kv_seq"), block=block)
             return shd.constrain(leaf, *la)
         return jax.tree.map(move, cache, axes)
     return transfer
 
 
-def _transfer_cache(cfg, cache, batch: int, total: int, dec_mesh, dec_rules,
-                    mode: str, dst_shardings):
-    """Two-mesh cache handoff: move the committed prefill cache onto the
-    decode mesh placement. ``"bf16"`` is a plain ``device_put``;
+def make_cache_mover(cfg, batch: int, total: int, dec_mesh, dec_rules,
+                     mode: str, dst_shardings):
+    """Two-mesh cache handoff, built ONCE: returns ``move(cache) -> cache``
+    placing a committed prefill cache (or a single request's ``batch=1``
+    slice) onto the decode mesh. ``"bf16"`` is a plain ``device_put``;
     ``"int8"`` quantizes each sequence-carrying leaf blockwise along the
     sequence axis *on the prefill mesh*, moves the s8 chunks + f32 scales
     (the only cross-mesh traffic, ~1/4 the bf16 bytes), and dequantizes
     on arrival — AutoComp's compaction-output handoff, as a cache stream.
+    The quantize/dequantize programs are jitted once here, so the slot
+    streamer can call ``move`` per admission without recompiling.
     """
     if mode == "bf16":
-        return jax.device_put(cache, dst_shardings)
+        return lambda cache: jax.device_put(cache, dst_shardings)
     axes = transformer.cache_axes(cfg, batch, total)
-    leaves, treedef = jax.tree.flatten(cache)
+    c_abs = transformer.abstract_cache(cfg, batch, total)
+    abs_l, treedef = jax.tree.flatten(c_abs)
     axes_l = [tuple(a) for a in treedef.flatten_up_to(axes)]
     dst_l = treedef.flatten_up_to(dst_shardings)
     seq_ix = [la.index("kv_seq") if "kv_seq" in la else None for la in axes_l]
-    dtypes = [x.dtype for x in leaves]
+    dtypes = [x.dtype for x in abs_l]
 
-    def quant(ls):
+    qs_shardings = []
+    for x, si, la in zip(abs_l, seq_ix, axes_l):
+        if si is None:
+            qs_shardings.append(None)
+            continue
+        q_axes = la[:si] + la[si + 1:] + (la[si],)   # seq-last layout
+        _, nb = collectives.lastdim_blocks(x.shape[si])
+        s_shape = tuple(d for i, d in enumerate(x.shape) if i != si) + (nb,)
+        qs_shardings.append((
+            jax.sharding.NamedSharding(dec_mesh, shd.resolve_spec(
+                x.shape[:si] + x.shape[si + 1:] + (x.shape[si],),
+                q_axes, dec_mesh, dec_rules)),
+            jax.sharding.NamedSharding(dec_mesh, shd.resolve_spec(
+                s_shape, q_axes[:-1] + (None,), dec_mesh, dec_rules))))
+
+    @jax.jit
+    def quant(ls):                               # runs on the prefill mesh
         return [x if si is None
                 else collectives.quantize_int8_seqaxis(x, si)
                 for x, si in zip(ls, seq_ix)]
-
-    q_leaves = jax.jit(quant)(leaves)          # runs on the prefill mesh
-    moved = []
-    for x, si, la, dst in zip(q_leaves, seq_ix, axes_l, dst_l):
-        if si is None:
-            moved.append(jax.device_put(x, dst))
-            continue
-        q, s = x
-        q_axes = la[:si] + la[si + 1:] + (la[si],)   # seq-last layout
-        q_sh = jax.sharding.NamedSharding(
-            dec_mesh, shd.resolve_spec(q.shape, q_axes, dec_mesh, dec_rules))
-        s_sh = jax.sharding.NamedSharding(
-            dec_mesh, shd.resolve_spec(s.shape, q_axes[:-1] + (None,),
-                                       dec_mesh, dec_rules))
-        moved.append((jax.device_put(q, q_sh), jax.device_put(s, s_sh)))
 
     def dequant(ls):
         return treedef.unflatten([
             x if si is None
             else collectives.dequantize_int8_seqaxis(x[0], x[1], si).astype(dt)
             for x, si, dt in zip(ls, seq_ix, dtypes)])
+    dequant = jax.jit(dequant, out_shardings=dst_shardings)
 
-    return jax.jit(dequant, out_shardings=dst_shardings)(moved)
+    def move(cache):
+        q_leaves = quant(jax.tree.leaves(cache))
+        moved = []
+        for x, si, dst, qs in zip(q_leaves, seq_ix, dst_l, qs_shardings):
+            if si is None:
+                moved.append(jax.device_put(x, dst))
+            else:
+                moved.append((jax.device_put(x[0], qs[0]),
+                              jax.device_put(x[1], qs[1])))
+        return dequant(moved)
+    return move
+
+
+STREAMS = ("batch", "slots")
 
 
 def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
@@ -149,7 +180,8 @@ def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
              prompt_lens: Optional[np.ndarray] = None,
              mesh=None, rules=None, act_transport: str = "bf16",
              decode_mesh=None, decode_rules=None,
-             cache_transfer: str = "bf16", kv_storage: str = "bf16"):
+             cache_transfer: str = "bf16", kv_storage: str = "bf16",
+             stream: str = "batch", slots: int = 0):
     """prompts: (B, S0) int32, right-padded when ragged. Greedy (or
     sampled) decode of ``max_new`` tokens per row.
 
@@ -163,11 +195,30 @@ def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
     ``decode_mesh`` disaggregates: prefill compiles on ``mesh`` (its own
     devices, ``rules``), decode on ``decode_mesh`` (``decode_rules``,
     default the batch-heavy ``serve_decode`` preset), and the prefilled
-    cache crosses between them once — raw under
-    ``cache_transfer="bf16"``, as seq-blockwise s8 chunks + scales under
-    ``"int8"``. ``kv_storage="int8"`` keeps the decode-resident cache
-    int8 (works colocated too, and even without a mesh).
+    cache crosses between them — raw under ``cache_transfer="bf16"``, as
+    seq-blockwise s8 chunks + scales under ``"int8"``.
+    ``kv_storage="int8"`` keeps the decode-resident cache int8 (works
+    colocated too, and even without a mesh); ``"f8"`` stores scale-free
+    e4m3 instead (same HBM saving, no scale leaves).
+
+    ``stream`` picks the handoff granularity: ``"batch"`` (this function's
+    body) prefills the whole batch and hands the cache to a fresh decode
+    batch once; ``"slots"`` streams each request's cache slice into a
+    *running* decode batch via slot admission (``slots`` = slot-table
+    size, 0 = one per request) with the next slice's wire transfer
+    double-buffered behind the current decode steps — see
+    :func:`_generate_slots`.
     """
+    if stream not in STREAMS:
+        raise ValueError(f"unknown stream {stream!r}; "
+                         f"expected one of {STREAMS}")
+    if stream == "slots":
+        return _generate_slots(
+            cfg, params, prompts, max_new=max_new, temperature=temperature,
+            seed=seed, prompt_lens=prompt_lens, mesh=mesh, rules=rules,
+            act_transport=act_transport, decode_mesh=decode_mesh,
+            decode_rules=decode_rules, cache_transfer=cache_transfer,
+            kv_storage=kv_storage, slots=slots)
     b, s0 = prompts.shape
     total = s0 + max_new
     ragged = prompt_lens is not None
@@ -239,12 +290,12 @@ def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
             c_axes = transformer.cache_axes(cfg, b, total)
             dst = shd.tree_shardings(c_abs_bf16, c_axes, dec_mesh, dec_rules)
             c_shard = dst
-            if kv_storage == "int8":
+            if kv_storage != "bf16":
                 c_shard = shd.tree_shardings(
                     transformer.abstract_cache(cfg, b, total,
-                                               kv_storage="int8"),
+                                               kv_storage=kv_storage),
                     transformer.cache_axes(cfg, b, total,
-                                           kv_storage="int8"),
+                                           kv_storage=kv_storage),
                     dec_mesh, dec_rules)
             if disagg:
                 # the decode cluster holds its own replica of the weights
@@ -252,14 +303,15 @@ def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
                     transformer.abstract_params(cfg),
                     transformer.param_axes(cfg), dec_mesh, dec_rules)
                 params_dec = jax.device_put(params, p_shard_dec)
-                cache = _transfer_cache(cfg, cache, b, total, dec_mesh,
-                                        dec_rules, cache_transfer, dst)
+                cache = make_cache_mover(cfg, b, total, dec_mesh,
+                                         dec_rules, cache_transfer,
+                                         dst)(cache)
             else:
                 # colocated: commit the grown cache to its serve placement
                 cache = jax.device_put(cache, dst)
-        if kv_storage == "int8":
-            quant = jax.jit(transformer.quantize_cache_int8,
-                            out_shardings=c_shard)
+        if kv_storage != "bf16":
+            quant = jax.jit(lambda c: transformer.quantize_cache(
+                c, kv_storage), out_shardings=c_shard)
             cache = quant(cache)
         decode = jax.jit(decode_fn, out_shardings=(None, c_shard)) \
             if c_shard is not None else jax.jit(decode_fn)
@@ -283,6 +335,298 @@ def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
             else:
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
     return np.concatenate(out_tokens, axis=1)
+
+
+def supports_slot_streaming(cfg) -> bool:
+    """Slot admission decodes every request from its own position — the
+    ragged machinery — so windowed (ring-buffer) and recurrent-state
+    families are out (their slot rows cannot be masked/overwritten
+    independently of scan history)."""
+    return not (cfg.attn_window or cfg.family in ("hybrid", "ssm_xlstm"))
+
+
+def _require_slot_streaming(cfg) -> None:
+    if not supports_slot_streaming(cfg):
+        raise NotImplementedError(
+            f"slot streaming is unsupported for {cfg.name}: windowed "
+            "(ring-buffer) and recurrent-state families need per-row "
+            "prefill masking; use --stream batch instead")
+
+
+def make_slot_admit_step(cfg, slots: int, total: int, transfer: str,
+                         kv_storage: str,
+                         block: int = collectives.ACT_BLOCK):
+    """Admission step of continuous slot streaming: returns
+    ``admit(cache, slice, slot) -> cache`` writing one request's grown
+    ``[1, total]`` bf16 cache slice into row ``slot`` of the *running*
+    decode cache (in its resident storage layout). ``slot`` is a traced
+    scalar, so one compiled program serves every slot.
+
+    ``transfer`` is the colocated wire form: ``"int8"`` routes each
+    sequence-carrying leaf through ``collectives.stream_slot_int8`` (or
+    ``stream_int8`` when the slice is re-quantized to a resident storage
+    format afterwards), so the compiled slice reshard carries s8 chunks +
+    f32 scales — the program the dryrun parses for per-slot wire bytes.
+    The two-mesh launcher ships the slice with ``make_cache_mover``
+    *before* admission and calls this with ``transfer="bf16"``.
+    """
+    if transfer not in collectives.CACHE_TRANSFERS:
+        raise ValueError(f"unknown cache_transfer {transfer!r}; "
+                         f"expected one of {collectives.CACHE_TRANSFERS}")
+    _require_slot_streaming(cfg)
+    slice_axes = transformer.cache_axes(cfg, 1, total)
+    # the slot-table cache's batch dim IS the slot dim: constrain the
+    # written rows through the "slots" logical axis (the serve presets
+    # map it to the batch's mesh axes), pinning the admitted cache to the
+    # slot-row layout instead of letting XLA infer a regather around the
+    # dynamic_update_slice
+    store_axes = {
+        name: tuple("slots" if a == "batch" else a for a in la)
+        for name, la in transformer.cache_axes(
+            cfg, slots, total, kv_storage=kv_storage).items()}
+
+    def admit(cache, slc, slot):
+        slot = jnp.asarray(slot, jnp.int32)
+        out = dict(cache)
+        wired = {}
+        for name, leaf in slc.items():
+            la = tuple(slice_axes[name])
+            if transfer == "int8" and "kv_seq" in la:
+                sa = la.index("kv_seq")
+                if kv_storage == "bf16":
+                    # wire + slot-row write fused: the per-slot variant of
+                    # the cache stream
+                    out[name] = shd.constrain(
+                        collectives.stream_slot_int8(
+                            cache[name], leaf, slot, *la, seq_axis=sa,
+                            batch_axis=la.index("batch"), block=block),
+                        *store_axes[name])
+                    continue
+                # quantized storage re-encodes the slice after the wire
+                # roundtrip, so the stream and the write stay separate
+                leaf = collectives.stream_int8(leaf, *la, seq_axis=sa,
+                                               block=block)
+            wired[name] = leaf
+        store = transformer.quantize_cache(wired, kv_storage)
+        for name, upd in store.items():
+            la = store_axes[name]
+            start = [jnp.zeros((), jnp.int32)] * cache[name].ndim
+            start[la.index("slots")] = slot
+            out[name] = shd.constrain(
+                jax.lax.dynamic_update_slice(
+                    cache[name], upd.astype(cache[name].dtype),
+                    tuple(start)),
+                *la)
+        return out
+    return admit
+
+
+def _generate_slots(cfg, params, prompts: np.ndarray, max_new: int,
+                    temperature: float, seed: int,
+                    prompt_lens: Optional[np.ndarray],
+                    mesh, rules, act_transport: str,
+                    decode_mesh, decode_rules,
+                    cache_transfer: str, kv_storage: str, slots: int):
+    """Continuous cross-batch disaggregation: prefill streams each
+    finished request's cache slice into a RUNNING decode batch.
+
+    The decode side holds a slot table of ``slots`` rows (the cache's
+    batch dim doubles as the slot dim). Each request is prefilled on its
+    own (``[1, S0]``; per-request positions are the ragged machinery, so
+    its tokens match the whole-batch path bit-for-bit), its grown slice
+    is quantized/shipped/dequantized into a free slot
+    (:func:`make_slot_admit_step`), and the slot decodes from the
+    request's own position while other slots are mid-decode or still
+    empty. A finished slot is freed and reused by the next pending
+    request — admission overwrites the entire ``[1, total]`` row, so no
+    state can bleed between consecutive occupants. Transfers are
+    double-buffered: the next pending request's prefill + wire shipment
+    is dispatched (async) at admission time, so it overlaps the decode
+    steps that run before the next slot frees; the wall-clock wait the
+    overlap failed to hide is recorded in ``_generate_slots.last_stats``
+    (the launcher prints it).
+
+    Returns tokens ``(B, max_new)``; greedy tokens are token-for-token
+    identical to the whole-batch path (per-row attention independence —
+    the property ``tests/test_serve_disagg.py`` pins on the 8-device
+    mesh).
+    """
+    b, s0 = prompts.shape
+    total = s0 + max_new
+    lens = np.asarray(prompt_lens, np.int32) if prompt_lens is not None \
+        else np.full((b,), s0, np.int32)
+    assert lens.shape == (b,) and (lens >= 1).all() and (lens <= s0).all()
+    # fail before any compile: the same families that refuse ragged
+    # refuse slot streaming (and quantized storage refuses recurrent
+    # caches); make_slot_admit_step re-checks for direct callers
+    _require_slot_streaming(cfg)
+    if cache_transfer not in collectives.CACHE_TRANSFERS:
+        raise ValueError(f"unknown cache_transfer {cache_transfer!r}; "
+                         f"expected one of {collectives.CACHE_TRANSFERS}")
+    n_slots = int(slots) if slots else b
+    if n_slots < 1:
+        raise ValueError(f"slot table needs at least one slot, got {slots}")
+
+    disagg = decode_mesh is not None
+    if disagg and mesh is None:
+        raise ValueError("disaggregated serving (decode_mesh=...) needs a "
+                         "prefill mesh too")
+    if mesh is not None and rules is None:
+        rules = shd.PRESETS["serve_sp"]
+    if disagg and decode_rules is None:
+        decode_rules = shd.PRESETS["serve_decode"]
+    dec_mesh = decode_mesh if disagg else mesh
+    dec_rules = decode_rules if disagg else rules
+
+    prefill_fn = step_lib.make_prefill_step(cfg, act_transport)
+    dec_act = "bf16" if disagg and dec_rules is shd.PRESETS["serve_decode"] \
+        else act_transport
+    decode_fn = step_lib.make_decode_step(cfg, total, dec_act, kv_storage)
+
+    pre_ctx = shd.axis_rules(mesh, rules) if mesh is not None \
+        else contextlib.nullcontext()
+    dec_ctx = shd.axis_rules(dec_mesh, dec_rules) if dec_mesh is not None \
+        else contextlib.nullcontext()
+
+    slice_abs = transformer.abstract_cache(cfg, 1, total)
+    store_abs = transformer.abstract_cache(cfg, n_slots, total,
+                                           kv_storage=kv_storage)
+
+    with pre_ctx:
+        params_pre = params
+        if mesh is not None:
+            p_shard = shd.tree_shardings(transformer.abstract_params(cfg),
+                                         transformer.param_axes(cfg),
+                                         mesh, rules)
+            params_pre = jax.device_put(params, p_shard)
+        prefill = jax.jit(prefill_fn)
+        grow = jax.jit(lambda c: grow_cache(c, slice_abs))
+
+    with dec_ctx:
+        c_shard = mover = None
+        params_dec = params_pre
+        if dec_mesh is not None:
+            c_shard = shd.tree_shardings(
+                store_abs,
+                transformer.cache_axes(cfg, n_slots, total,
+                                       kv_storage=kv_storage),
+                dec_mesh, dec_rules)
+            if disagg:
+                p_shard_dec = shd.tree_shardings(
+                    transformer.abstract_params(cfg),
+                    transformer.param_axes(cfg), dec_mesh, dec_rules)
+                params_dec = jax.device_put(params, p_shard_dec)
+                slice_dst = shd.tree_shardings(
+                    slice_abs, transformer.cache_axes(cfg, 1, total),
+                    dec_mesh, dec_rules)
+                mover = make_cache_mover(cfg, 1, total, dec_mesh, dec_rules,
+                                         cache_transfer, slice_dst)
+        admit = jax.jit(make_slot_admit_step(
+            cfg, n_slots, total,
+            "bf16" if disagg else cache_transfer, kv_storage),
+            out_shardings=c_shard)
+        decode = jax.jit(decode_fn, out_shardings=(None, c_shard)) \
+            if c_shard is not None else jax.jit(decode_fn)
+        cache = jax.jit(lambda: jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), store_abs),
+            out_shardings=c_shard)()
+
+    # ---- host-side slot table + double-buffered prefetch ----------------
+    key = jax.random.PRNGKey(seed)
+    out_tokens = [[] for _ in range(b)]
+    slot_req = [-1] * n_slots          # request id per slot, -1 = free
+    slot_tok = np.zeros((n_slots,), np.int32)
+    slot_pos = np.zeros((n_slots,), np.int32)
+    slot_keys: list = [None] * n_slots
+    next_req = 0
+    inflight: list = []                # at most one prefetched shipment
+    stats = {"admissions": 0, "transfer_wait_s": 0.0, "decode_steps": 0}
+
+    def start_prefetch():
+        """Prefill + ship the next pending request (async dispatch): the
+        wire transfer overlaps whatever decode steps run before the next
+        admission — the double buffer."""
+        nonlocal next_req
+        if next_req >= b or inflight:
+            return
+        i = next_req
+        next_req += 1
+        with pre_ctx:
+            logits, c = prefill(params_pre, {
+                "tokens": jnp.asarray(prompts[i:i + 1]),
+                "last_pos": jnp.asarray(lens[i:i + 1] - 1)})
+            slc = grow(c)
+            tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+        if mover is not None:
+            slc = mover(slc)
+        inflight.append((i, slc, tok0))
+
+    def emit(i, t, slot):
+        out_tokens[i].append(int(t))
+        if len(out_tokens[i]) >= max_new:
+            slot_req[slot] = -1        # free the slot for reuse
+
+    def admit_next(slot):
+        nonlocal cache
+        if not inflight:
+            start_prefetch()
+        i, slc, tok0 = inflight.pop(0)
+        t0 = time.time()
+        jax.block_until_ready(slc)     # what the overlap failed to hide
+        stats["transfer_wait_s"] += time.time() - t0
+        with dec_ctx:
+            cache = admit(cache, slc, jnp.asarray(slot, jnp.int32))
+        stats["admissions"] += 1
+        slot_req[slot] = i
+        slot_pos[slot] = lens[i]
+        slot_tok[slot] = int(np.asarray(tok0)[0])
+        slot_keys[slot] = jax.random.fold_in(key, i)
+        emit(i, slot_tok[slot], slot)  # the prefill token
+        start_prefetch()               # double buffer the next shipment
+
+    start_prefetch()
+    while True:
+        # keep admitting until the table is full or the queue drains — a
+        # slot freed AT admission (max_new == 1: the prefill token is the
+        # whole request) must be refilled in the same pass, or pending
+        # requests would be dropped when every slot reads free below
+        admitted = True
+        while admitted:
+            admitted = False
+            for s_ in range(n_slots):
+                if slot_req[s_] < 0 and (inflight or next_req < b):
+                    admit_next(s_)
+                    admitted = True
+        if all(r < 0 for r in slot_req):
+            break                      # nothing active, nothing pending
+        tok = jnp.asarray(slot_tok[:, None])
+        pos = jnp.asarray(slot_pos)
+        with dec_ctx:
+            logits, cache = decode(params_dec, cache,
+                                   {"tokens": tok, "pos": pos})
+        stats["decode_steps"] += 1
+        if temperature > 0:
+            logits_np = np.asarray(logits, np.float32)
+            nxt = np.zeros((n_slots,), np.int32)
+            for s_ in range(n_slots):
+                if slot_req[s_] < 0:
+                    continue
+                slot_keys[s_], sub = jax.random.split(slot_keys[s_])
+                nxt[s_] = int(jax.random.categorical(
+                    sub, jnp.asarray(logits_np[s_]) / temperature))
+        else:
+            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for s_ in range(n_slots):
+            i = slot_req[s_]
+            if i < 0:
+                continue
+            slot_tok[s_] = nxt[s_]
+            slot_pos[s_] += 1
+            emit(i, nxt[s_], s_)
+
+    assert all(len(ts) == max_new for ts in out_tokens)
+    _generate_slots.last_stats = stats     # launcher reporting hook
+    return np.asarray(out_tokens, np.int32)
 
 
 def _pick_tp(n_devices: int, cfg) -> int:
@@ -321,22 +665,42 @@ def make_disagg_meshes(cfg, tp_prefill: int = 0, tp_decode: int = 0):
 
 
 def disagg_decode_report(cfg, batch: int, seq_len: int, mesh,
-                         ici_bw: float = 50e9):
+                         ici_bw: float = 50e9, hbm_bw: float = 819e9,
+                         transfers=collectives.CACHE_TRANSFERS,
+                         storages=collectives.KV_STORAGES,
+                         blocks=(collectives.ACT_BLOCK,)):
     """Compile the disaggregated-decode design space on one mesh and
-    report every cache_transfer x kv_storage combination.
+    report every cache_transfer x kv_storage (x stream block) combination.
 
     Per combination ``"<transfer>x<storage>"``: ``transfer_s`` (the
     serve_sp -> serve_decode cache reshard's wire, HLO-parsed from the
     compiled transfer program), ``decode_step_s`` (the decode step's
     per-token wire under the storage arm), their sum ``collective_s``,
-    and ``cache_resident_bytes_per_device`` (what the decode mesh's HBM
-    actually holds — the storage arm's rent). Storage arms a family does
-    not support (recurrent caches) are skipped and named in
-    ``"unsupported"``. Used by ``repro.launch.dryrun`` for decode cells
-    and exercised directly by the disagg mesh tests.
+    ``cache_resident_bytes_per_device`` (what the decode mesh's HBM
+    actually holds — the storage arm's rent), and
+    ``slot_stream_overlap_frac``: the fraction of a *per-slot* transfer
+    (one request's ``[1, seq]`` slice, HLO-parsed from the compiled slot
+    admission program — ``rep["slot_stream"]``) a double-buffered
+    admission hides behind decode steps, modeling the steady state where
+    the slot table readmits one of its ``batch`` slots every
+    ``seq_len/batch`` decode steps. Extra ``blocks`` sweep the stream's
+    quantization block size (``rep["block_sweep"]``; f32 scales per
+    block, so smaller blocks buy fidelity with wire), and
+    ``rep["tuned"]`` is the ``repro.core.autotune.tune_design`` hillclimb
+    over transfer x storage x block minimizing the combo's modeled cost:
+    wire ``collective_s`` plus the per-token HBM read of the resident
+    cache (``cache_resident_bytes / hbm_bw`` — what the storage arm
+    actually buys back). Storage arms a family does not support (recurrent
+    caches) are skipped and named in ``"unsupported_storage"``. Used by
+    ``repro.launch.dryrun`` for decode cells and exercised directly by
+    the disagg mesh tests.
     """
+    from repro.core import autotune
     from repro.launch import analysis
 
+    transfers = tuple(transfers)
+    storages = tuple(storages)
+    blocks = tuple(blocks)
     pre_rules = shd.PRESETS["serve_sp"]
     dec_rules = shd.PRESETS["serve_decode"]
     c_abs = transformer.abstract_cache(cfg, batch, seq_len)
@@ -346,15 +710,37 @@ def disagg_decode_report(cfg, batch: int, seq_len: int, mesh,
     p_abs = transformer.abstract_params(cfg)
     p_shard = shd.tree_shardings(p_abs, transformer.param_axes(cfg),
                                  mesh, dec_rules)
+    slice_abs = transformer.abstract_cache(cfg, 1, seq_len)
+    slice_axes = transformer.cache_axes(cfg, 1, seq_len)
+    slice_pre = shd.tree_shardings(slice_abs, slice_axes, mesh, pre_rules)
+    slot_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
 
-    transfers = {}
-    for t in collectives.CACHE_TRANSFERS:
-        fn = make_cache_transfer_step(cfg, batch, seq_len, t)
-        with shd.axis_rules(mesh, dec_rules):
-            hlo = jax.jit(fn, in_shardings=(pre_shard,),
-                          out_shardings=dec_shard
-                          ).lower(c_abs).compile().as_text()
-        transfers[t] = analysis.hlo_collective_bytes(hlo)
+    # whole-batch transfer + per-slot admission wire, per (transfer, block)
+    # — the bf16 arm ignores the block, so it compiles once; families
+    # that refuse slot streaming (windowed/recurrent) keep the
+    # whole-batch metrics and simply omit the slot_stream ones
+    slot_ok = supports_slot_streaming(cfg)
+    t_coll, slot_coll = {}, {}
+    for t in transfers:
+        for blk in (blocks if t == "int8" else blocks[:1]):
+            fn = make_cache_transfer_step(cfg, batch, seq_len, t, block=blk)
+            with shd.axis_rules(mesh, dec_rules):
+                hlo = jax.jit(fn, in_shardings=(pre_shard,),
+                              out_shardings=dec_shard
+                              ).lower(c_abs).compile().as_text()
+            t_coll[(t, blk)] = analysis.hlo_collective_bytes(hlo)
+            if not slot_ok:
+                continue
+            admit = make_slot_admit_step(cfg, batch, seq_len, t, "bf16",
+                                         block=blk)
+            with shd.axis_rules(mesh, dec_rules):
+                hlo = jax.jit(
+                    admit, in_shardings=(dec_shard, slice_pre, slot_sh),
+                    out_shardings=dec_shard
+                ).lower(c_abs, slice_abs,
+                        jax.ShapeDtypeStruct((), jnp.int32)
+                        ).compile().as_text()
+            slot_coll[(t, blk)] = analysis.hlo_collective_bytes(hlo)
 
     def device_bytes(abs_tree, axes_tree):
         tot = 0.0
@@ -369,7 +755,7 @@ def disagg_decode_report(cfg, batch: int, seq_len: int, mesh,
     decodes, cache_bytes, unsupported = {}, {}, []
     batch_abs = {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
                  "pos": jax.ShapeDtypeStruct((), jnp.int32)}
-    for s in collectives.KV_STORAGES:
+    for s in storages:
         try:
             fn = step_lib.make_decode_step(cfg, seq_len, "bf16", s)
         except NotImplementedError:
@@ -387,8 +773,20 @@ def disagg_decode_report(cfg, batch: int, seq_len: int, mesh,
         decodes[s] = analysis.hlo_collective_bytes(hlo)
         cache_bytes[s] = device_bytes(cs_abs, cs_axes)
 
+    # steady-state decode budget per admission: all batch slots serving
+    # ~seq_len-token requests readmit one slot every seq_len/batch steps
+    hide_steps = max(1, seq_len // max(1, batch))
+    blk0 = blocks[0]
+
+    def _tb(t, blk):
+        return t_coll[(t, blk if t == "int8" else blk0)]
+
+    def _sb(t, blk):
+        return slot_coll[(t, blk if t == "int8" else blk0)]
+
     cells = {}
-    for t, tcoll in transfers.items():
+    for t in transfers:
+        tcoll = _tb(t, blk0)
         for s, dcoll in decodes.items():
             tw = float(tcoll["total_wire_bytes_bf16eq"])
             dw = float(dcoll["total_wire_bytes_bf16eq"])
@@ -402,7 +800,57 @@ def disagg_decode_report(cfg, batch: int, seq_len: int, mesh,
                 "decode_wire_bytes_bf16eq": int(dw),
                 "cache_resident_bytes_per_device": cache_bytes[s],
             }
-    return {"cells": cells, "unsupported_storage": unsupported}
+            if slot_ok:
+                sw = float(_sb(t, blk0)["total_wire_bytes_bf16eq"])
+                slot_s = sw / ici_bw
+                hidden = min(slot_s, hide_steps * dw / ici_bw)
+                cells[f"{t}x{s}"]["slot_stream_overlap_frac"] = \
+                    1.0 if sw == 0 else hidden / slot_s
+
+    slot_stream = {}
+    for t in (transfers if slot_ok else ()):
+        sc = _sb(t, blk0)
+        slot_stream[t] = {
+            "wire_bytes_bf16eq": int(sc["total_wire_bytes_bf16eq"]),
+            "wire_bytes_bf16eq_s8":
+                int(sc["total_wire_bytes_bf16eq_s8"]),
+            "transfer_s": float(sc["total_wire_bytes_bf16eq"]) / ici_bw,
+            "hide_steps": hide_steps,
+        }
+
+    block_sweep = {
+        t: {int(blk): {
+            "transfer_wire_bytes_bf16eq":
+                int(_tb(t, blk)["total_wire_bytes_bf16eq"]),
+            **({"slot_wire_bytes_bf16eq":
+                int(_sb(t, blk)["total_wire_bytes_bf16eq"])}
+               if slot_ok else {}),
+        } for blk in (blocks if t == "int8" else blocks[:1])}
+        for t in transfers}
+
+    def objective(point):
+        # wire (one transfer + one decode step) + the decode step's HBM
+        # read of the resident cache — the term the storage arm halves
+        tw = float(_tb(point["cache_transfer"],
+                       point["block"])["total_wire_bytes_bf16eq"])
+        s = point["kv_storage"]
+        dw = float(decodes[s]["total_wire_bytes_bf16eq"])
+        return (tw + dw) / ici_bw + cache_bytes[s] / hbm_bw
+
+    tuned = None
+    if decodes:
+        res = autotune.tune_design(objective, {
+            "cache_transfer": transfers,
+            "kv_storage": tuple(decodes),
+            "block": blocks,
+        })
+        tuned = {"point": res.best_point,
+                 "collective_s": res.best_objective,
+                 "evaluations": res.evaluations}
+
+    return {"cells": cells, "unsupported_storage": unsupported,
+            "slot_stream": slot_stream, "block_sweep": block_sweep,
+            "hide_steps": hide_steps, "tuned": tuned}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -433,9 +881,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "handoff")
     ap.add_argument("--kv-storage", default="bf16",
                     choices=list(step_lib.KV_STORAGES),
-                    help="decode-resident cache dtype (int8 halves cache "
-                         "HBM; attention dequantizes per block at read "
+                    help="decode-resident cache dtype (int8: s8 + scales, "
+                         "f8: scale-free e4m3 — both ~halve cache HBM; "
+                         "attention dequantizes/upcasts per block at read "
                          "time)")
+    ap.add_argument("--stream", default="batch", choices=list(STREAMS),
+                    help="handoff granularity: 'batch' prefills the whole "
+                         "batch then decodes it; 'slots' streams each "
+                         "request's cache slice into a running decode "
+                         "batch via slot admission, transfers "
+                         "double-buffered behind decode steps")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="slot-table size for --stream slots (0 = one "
+                         "slot per request; smaller forces slot reuse)")
     return ap
 
 
@@ -477,7 +935,8 @@ def main(argv=None) -> None:
                    mesh=mesh, rules=rules, act_transport=args.act_transport,
                    decode_mesh=decode_mesh, decode_rules=decode_rules,
                    cache_transfer=args.cache_transfer,
-                   kv_storage=args.kv_storage)
+                   kv_storage=args.kv_storage,
+                   stream=args.stream, slots=args.slots)
     dt = time.time() - t0
     n_tok = out.size
     mesh_desc = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -491,10 +950,16 @@ def main(argv=None) -> None:
           f"mesh={mesh_desc} "
           f"preset={args.preset} act_transport={args.act_transport} "
           f"disagg={args.disagg} cache_transfer={args.cache_transfer} "
-          f"kv_storage={args.kv_storage}"
+          f"kv_storage={args.kv_storage} stream={args.stream}"
           + (f" lens={lens.tolist()}" if lens is not None else ""))
     print(f"[serve] generated {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s incl. compile)")
+    if args.stream == "slots":
+        st = _generate_slots.last_stats
+        print(f"[serve] slot stream: admissions={st['admissions']} "
+              f"decode_steps={st['decode_steps']} "
+              f"transfer_wait_s={st['transfer_wait_s']:.3f} "
+              "(wire time the double buffer failed to hide behind decode)")
     print("[serve] sample:", out[0][:10])
 
 

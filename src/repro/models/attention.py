@@ -117,6 +117,12 @@ def gqa_apply(cfg: ModelConfig, p, x: jnp.ndarray, mode: str,
                                 *cache_sp)
             v_scale = constrain(ring_update(cache["v_scale"], v_sc, pos),
                                 *cache_sp)
+        elif storage == "f8":
+            # f8-resident cache: scale-free e4m3 cast of the new token's
+            # K/V (no companion scale leaves; decode_attention upcasts per
+            # block at read time).
+            k = collectives.cast_f8(k)
+            v = collectives.cast_f8(v)
         k_cache = constrain(ring_update(cache["k"], k, pos), *cache_sp)
         v_cache = constrain(ring_update(cache["v"], v, pos), *cache_sp)
         kpos = cache_slot_positions(cache_len_total + 1, size, pos)
@@ -227,6 +233,11 @@ def mla_apply(cfg: ModelConfig, p, x, mode, cache, pos, cache_len_total):
         q, latent, k_rope = _mla_qk(cfg, p, x, positions)
         storage = collectives.current_kv_storage()
         kr_new = k_rope[:, :, None, :]
+        if storage == "f8":
+            # f8-resident latent cache: scale-free e4m3, upcast at the
+            # same read-time boundary as int8 (the latent expansion)
+            latent = collectives.cast_f8(latent)
+            kr_new = collectives.cast_f8(kr_new)
         if storage == "int8":
             # int8-resident latent cache (MLA's read-time boundary is the
             # per-head expansion, so dequantization happens just before
@@ -254,6 +265,9 @@ def mla_apply(cfg: ModelConfig, p, x, mode, cache, pos, cache_len_total):
                 kr_att, constrain(kr_scale, "batch", None, None, None))
             lat_att = lat_att.astype(x.dtype)
             kr_att = kr_att.astype(x.dtype)
+        elif storage == "f8":
+            lat_att = collectives.uncast_f8(lat_att, x.dtype)
+            kr_att = collectives.uncast_f8(kr_att, x.dtype)
         k, v = _mla_expand(cfg, p, lat_att, kr_att[..., 0, :])
         kpos = cache_slot_positions(cache_len_total + 1, lat_cache.shape[1], pos)
         out = decode_attention(q, k, v, kpos, pos)

@@ -216,11 +216,16 @@ def decode_attention(q, k_cache, v_cache, k_positions, pos,
     (``kv_storage="int8"``): the stored leaves are blockwise-s8 along the
     feature axis and are dequantized here, per block, at read time — HBM
     holds half the bytes and only the attention operands ever exist in
-    float.
+    float. An f8-resident cache (``kv_storage="f8"``, scale-free e4m3)
+    arrives without scales and is upcast here the same way — per block on
+    the Pallas kernel path, whole-operand under XLA.
     """
     if k_scale is not None:
         k_cache = collectives.dequantize_int8_lastdim(k_cache, k_scale)
         v_cache = collectives.dequantize_int8_lastdim(v_cache, v_scale)
+    elif k_cache.dtype == collectives.F8_DTYPE:
+        k_cache = collectives.uncast_f8(k_cache)
+        v_cache = collectives.uncast_f8(v_cache)
     b, _, h, d = q.shape
     hkv = k_cache.shape[2]
     dv = v_cache.shape[-1]

@@ -87,10 +87,11 @@ def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
 # caches
 # ---------------------------------------------------------------------------
 
-# Cache leaves that carry attention KV state — the leaves an int8-resident
-# cache (kv_storage="int8") stores as s8 values + f32 scales blocked along
-# the trailing feature axis. Recurrent-state leaves (ssm_*, xlstm blocks)
-# are never storage-quantized.
+# Cache leaves that carry attention KV state — the leaves a quantized
+# resident cache stores compressed: kv_storage="int8" as s8 values + f32
+# scales blocked along the trailing feature axis, kv_storage="f8" as
+# scale-free e4m3 values (collectives.cast_f8). Recurrent-state leaves
+# (ssm_*, xlstm blocks) are never storage-quantized.
 QUANTIZABLE_CACHE_KEYS = ("k", "v", "latent", "k_rope")
 
 
@@ -100,7 +101,11 @@ def cache_struct(cfg: ModelConfig, batch: int, seq: int,
 
     ``kv_storage="int8"`` adds a ``<leaf>_scale`` entry per attention leaf
     (shape = leaf shape with the trailing feature dim replaced by its
-    per-position block count)."""
+    per-position block count); ``"f8"`` keeps the bf16 shapes — e4m3 is
+    scale-free, only the leaf dtype changes."""
+    if kv_storage not in collectives.KV_STORAGES:
+        raise ValueError(f"unknown kv_storage {kv_storage!r}; "
+                         f"expected one of {collectives.KV_STORAGES}")
     if cfg.family == "ssm_xlstm":
         return {"blocks": [
             (xlstm.mlstm_cache_shape(cfg, batch)
@@ -150,12 +155,12 @@ def cache_axes(cfg: ModelConfig, batch: int, seq: int,
 
 
 def _cache_leaf_dtype(name: str, kv_storage: str, dtype):
-    if kv_storage != "int8" or name not in _CACHE_AXES:
+    if kv_storage == "bf16" or name not in _CACHE_AXES:
         return dtype
     if name.endswith("_scale"):
         return jnp.float32
     if name in QUANTIZABLE_CACHE_KEYS:
-        return jnp.int8
+        return jnp.int8 if kv_storage == "int8" else collectives.F8_DTYPE
     return dtype
 
 
@@ -193,6 +198,23 @@ def quantize_cache_int8(cache: Dict[str, Any]) -> Dict[str, Any]:
         else:
             out[name] = leaf
     return out
+
+
+def quantize_cache(cache: Dict[str, Any], kv_storage: str) -> Dict[str, Any]:
+    """Convert a bf16 decode cache (or cache slice) into the resident
+    storage layout for ``kv_storage`` — identity for "bf16", s8 + scales
+    for "int8", scale-free e4m3 for "f8". jit-compatible; the slot
+    admission step and the whole-batch handoff both route through here."""
+    if kv_storage == "bf16":
+        return cache
+    if kv_storage == "int8":
+        return quantize_cache_int8(cache)
+    if kv_storage == "f8":
+        return {name: collectives.cast_f8(leaf)
+                if name in QUANTIZABLE_CACHE_KEYS else leaf
+                for name, leaf in cache.items()}
+    raise ValueError(f"unknown kv_storage {kv_storage!r}; "
+                     f"expected one of {collectives.KV_STORAGES}")
 
 
 # ---------------------------------------------------------------------------

@@ -226,18 +226,21 @@ def make_decode_step(cfg: ModelConfig, cache_len_total: int,
     ``transformer.abstract_cache(..., kv_storage="int8")`` — s8 value
     leaves plus f32 ``<leaf>_scale`` leaves — writes each new token
     quantized per position, and attention dequantizes per block at read
-    time. Orthogonal to ``act_transport`` (storage is what HBM holds; the
-    transport is how a reshard crosses the wire).
+    time. ``"f8"`` stores scale-free e4m3 leaves instead (same shapes as
+    bf16, half the bytes, upcast per block at read time). Orthogonal to
+    ``act_transport`` (storage is what HBM holds; the transport is how a
+    reshard crosses the wire).
     """
     _check_act_transport(act_transport)
     if kv_storage not in KV_STORAGES:
         raise ValueError(f"unknown kv_storage {kv_storage!r}; "
                          f"expected one of {KV_STORAGES}")
-    if kv_storage == "int8" and cfg.family in ("hybrid", "ssm_xlstm"):
+    if kv_storage != "bf16" and cfg.family in ("hybrid", "ssm_xlstm"):
         raise NotImplementedError(
-            f"kv_storage='int8' is unsupported for {cfg.name}: recurrent "
-            "state leaves (ssm/xlstm) accumulate quantization error across "
-            "steps; only pure-attention caches are int8-resident")
+            f"kv_storage={kv_storage!r} is unsupported for {cfg.name}: "
+            "recurrent state leaves (ssm/xlstm) accumulate quantization "
+            "error across steps; only pure-attention caches are "
+            "quantized-resident")
 
     def decode_step(params, cache, batch):
         with collectives.act_transport_scope(act_transport), \

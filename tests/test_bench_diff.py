@@ -110,6 +110,95 @@ class TestDiffTrajectories:
         assert res["regressions"] == []
 
 
+def _disagg_rec(**roofline):
+    r = _rec(shape="decode_32k", grad_transport=None, act_transport="bf16")
+    r["roofline"].update(roofline)
+    return r
+
+
+class TestSlotStreamAndF8Keys:
+    """The continuous-streaming / f8-arm roofline keys are first-class
+    gate metrics: per-slot wire bytes and transfer time regress when they
+    grow, overlap efficiency when it shrinks, the f8 storage arm like any
+    other combo."""
+
+    def test_all_new_keys_are_gated(self):
+        for t in ("bf16", "int8"):
+            assert bench_diff.METRICS[f"slot_stream_transfer_s_{t}"] \
+                == "lower"
+            assert bench_diff.METRICS[f"slot_stream_wire_bytes_{t}"] \
+                == "lower"
+            for s in ("bf16", "int8", "f8"):
+                assert bench_diff.METRICS[f"disagg_collective_s_{t}x{s}"] \
+                    == "lower"
+                assert bench_diff.METRICS[
+                    f"slot_stream_overlap_frac_{t}x{s}"] == "higher"
+        assert bench_diff.METRICS["disagg_decode_step_s_f8"] == "lower"
+        assert bench_diff.METRICS["disagg_tuned_collective_s"] == "lower"
+
+    def test_overlap_frac_drop_fails(self):
+        """Overlap efficiency is higher-is-better: transfer time that
+        stops hiding behind decode steps is a regression."""
+        base = [_disagg_rec(slot_stream_overlap_frac_int8xf8=0.40)]
+        cur = [_disagg_rec(slot_stream_overlap_frac_int8xf8=0.30)]  # -25%
+        res = bench_diff.diff_trajectories(cur, base)
+        assert [r["metric"] for r in res["regressions"]] \
+            == ["slot_stream_overlap_frac_int8xf8"]
+        # a gain never trips the gate
+        res2 = bench_diff.diff_trajectories(
+            [_disagg_rec(slot_stream_overlap_frac_int8xf8=0.9)], base)
+        assert res2["regressions"] == []
+
+    def test_slot_wire_and_f8_decode_step_growth_fails(self):
+        base = [_disagg_rec(slot_stream_wire_bytes_int8=1000,
+                            disagg_decode_step_s_f8=0.010)]
+        cur = [_disagg_rec(slot_stream_wire_bytes_int8=1300,   # +30%
+                           disagg_decode_step_s_f8=0.013)]     # +30%
+        res = bench_diff.diff_trajectories(cur, base)
+        assert sorted(r["metric"] for r in res["regressions"]) \
+            == ["disagg_decode_step_s_f8", "slot_stream_wire_bytes_int8"]
+
+
+class TestDisappearedKeys:
+    """A gated metric the baseline has but the current artifact lost must
+    fail loudly — before this rule a renamed roofline key silently
+    stopped being gated."""
+
+    def test_disappeared_metric_fails(self):
+        base = [_disagg_rec(disagg_collective_s_bf16xbf16=0.06,
+                            slot_stream_wire_bytes_int8=1000)]
+        cur = [_disagg_rec(slot_stream_wire_bytes_int8=1000)]
+        res = bench_diff.diff_trajectories(cur, base)
+        assert res["regressions"] == []
+        assert [m["metric"] for m in res["missing_metrics"]] \
+            == ["disagg_collective_s_bf16xbf16"]
+
+    def test_metric_absent_from_both_sides_is_skipped(self):
+        """Old baselines without the new keys stay comparable."""
+        res = bench_diff.diff_trajectories([_disagg_rec()], [_disagg_rec()])
+        assert res["compared"] == 1
+        assert res["missing_metrics"] == []
+
+    def test_new_metric_only_in_current_is_fine(self):
+        """Sweeps legitimately grow: a key the baseline never had is not
+        a disappearance."""
+        res = bench_diff.diff_trajectories(
+            [_disagg_rec(slot_stream_overlap_frac_int8xf8=0.4)],
+            [_disagg_rec()])
+        assert res["missing_metrics"] == [] and res["regressions"] == []
+
+    def test_ungated_key_disappearing_is_ignored(self):
+        base = [_disagg_rec(some_debug_number=1.0)]
+        res = bench_diff.diff_trajectories([_disagg_rec()], base)
+        assert res["missing_metrics"] == []
+
+    def test_disappeared_metric_exits_nonzero(self, tmp_path):
+        base = _traj(tmp_path / "base.json",
+                     [_disagg_rec(disagg_collective_s_bf16xbf16=0.06)])
+        cur = _traj(tmp_path / "cur.json", [_disagg_rec()])
+        assert bench_diff.main(["--current", cur, "--baseline", base]) == 1
+
+
 class TestMainGate:
     def test_missing_baseline_tolerated(self, tmp_path):
         cur = _traj(tmp_path / "cur.json", [_rec()])

@@ -112,3 +112,103 @@ class TestCacheStreamQuantizers:
         out = all_gather_int8(q, "batch", None)
         assert out.dtype == jnp.int8
         assert (out == q).all()
+
+    def test_slot_stream_writes_one_row_and_matches_stream(self):
+        """stream_slot_int8 == stream_int8 on the slice + a slot-row
+        write: the admitted row carries exactly the wire-roundtripped
+        slice, every other row is untouched."""
+        from repro.dist.collectives import stream_int8, stream_slot_int8
+        rng = np.random.RandomState(11)
+        cache = jnp.asarray(rng.randn(2, 4, 64, 3), jnp.bfloat16)
+        slc = jnp.asarray(rng.randn(2, 1, 64, 3), jnp.bfloat16)
+        la = ("layers", "batch", "kv_seq", None)
+        for slot in (0, 2, 3):
+            out = stream_slot_int8(cache, slc, slot, *la, seq_axis=2,
+                                   batch_axis=1, block=32)
+            ref = stream_int8(slc, *la, seq_axis=2, block=32)
+            assert (out[:, slot] == ref[:, 0]).all()
+            keep = np.delete(np.asarray(out, np.float32), slot, axis=1)
+            want = np.delete(np.asarray(cache, np.float32), slot, axis=1)
+            np.testing.assert_array_equal(keep, want)
+
+    def test_slot_stream_accepts_traced_slot(self):
+        from repro.dist.collectives import stream_slot_int8
+        cache = jnp.zeros((1, 3, 32, 2), jnp.bfloat16)
+        slc = jnp.ones((1, 1, 32, 2), jnp.bfloat16)
+        fn = jax.jit(lambda c, s, i: stream_slot_int8(
+            c, s, i, "layers", "batch", "kv_seq", None,
+            seq_axis=2, batch_axis=1, block=32))
+        for slot in (0, 2):
+            out = fn(cache, slc, jnp.asarray(slot, jnp.int32))
+            got = np.asarray(out, np.float32)
+            assert (got[:, slot] == 1.0).all()
+            assert got.sum() == 32 * 2   # only that row written
+
+
+class TestF8Storage:
+    """Scale-free e4m3 cache storage: the cast clips to the finite f8
+    range (e4m3fn overflows to nan, not inf) and the upcast is exact, so
+    cast -> uncast -> cast is idempotent over the whole f8 domain."""
+
+    def test_roundtrip_error_within_e4m3_precision(self):
+        from repro.dist.collectives import cast_f8, uncast_f8
+        rng = np.random.RandomState(13)
+        x = jnp.asarray(rng.randn(4, 257) * 3, jnp.float32)
+        out = np.asarray(uncast_f8(cast_f8(x)))
+        # 3 mantissa bits: relative error <= 2^-4, plus the subnormal
+        # floor near zero
+        np.testing.assert_allclose(out, np.asarray(x),
+                                   rtol=2 ** -4, atol=2 ** -9)
+
+    def test_overflow_saturates_to_finite_max(self):
+        from repro.dist.collectives import F8_MAX, cast_f8, uncast_f8
+        x = jnp.asarray([1e4, -1e5, np.inf, -np.inf], jnp.float32)
+        out = np.asarray(uncast_f8(cast_f8(x)))
+        assert np.isfinite(out).all()
+        np.testing.assert_array_equal(out, [F8_MAX, -F8_MAX,
+                                            F8_MAX, -F8_MAX])
+
+    def test_zero_roundtrips_exactly(self):
+        from repro.dist.collectives import cast_f8, uncast_f8
+        out = uncast_f8(cast_f8(jnp.zeros((16,), jnp.bfloat16)))
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+    def test_cast_uncast_idempotent_over_entire_f8_domain(self):
+        """Exhaustive property: for every finite e4m3 bit pattern q,
+        cast(uncast(q)) == q bit-for-bit — the storage write/read pair
+        never drifts a resident value."""
+        from repro.dist.collectives import F8_DTYPE, cast_f8, uncast_f8
+        bits = jnp.arange(256, dtype=jnp.uint8)
+        q = jax.lax.bitcast_convert_type(bits, F8_DTYPE)
+        finite = ~jnp.isnan(uncast_f8(q))
+        rt = jax.lax.bitcast_convert_type(cast_f8(uncast_f8(q)), jnp.uint8)
+        same = np.asarray((rt == bits) | ~finite)
+        assert same.all(), np.asarray(bits)[~same]
+
+    def test_all_gather_int8_passes_f8_through(self):
+        """An f8-resident cache leaf crosses the int8 act transport as-is
+        — already 1 byte/element, re-quantizing would only add error."""
+        from repro.dist.collectives import F8_DTYPE, all_gather_int8
+        rng = np.random.RandomState(17)
+        x = jnp.asarray(rng.randn(4, 8), jnp.float32).astype(F8_DTYPE)
+        out = all_gather_int8(x, "batch", None)
+        assert out.dtype == F8_DTYPE
+        assert (jax.lax.bitcast_convert_type(out, jnp.uint8)
+                == jax.lax.bitcast_convert_type(x, jnp.uint8)).all()
+
+    def test_passthrough_property_s8_f8_identity_many_shapes(self):
+        """Property over random shapes/values: for both compressed
+        dtypes, the transport is the identity (bit-preserving)."""
+        from repro.dist.collectives import F8_DTYPE, all_gather_int8
+        rng = np.random.RandomState(19)
+        for shape in [(3,), (2, 5), (2, 3, 4), (1, 1, 7, 3)]:
+            s8 = jnp.asarray(
+                rng.randint(-127, 128, size=shape), jnp.int8)
+            axes = ("batch",) + (None,) * (len(shape) - 1)
+            assert (all_gather_int8(s8, *axes) == s8).all()
+            f8 = jnp.asarray(rng.randn(*shape), jnp.float32
+                             ).astype(F8_DTYPE)
+            out = all_gather_int8(f8, *axes)
+            assert out.dtype == F8_DTYPE
+            assert (jax.lax.bitcast_convert_type(out, jnp.uint8)
+                    == jax.lax.bitcast_convert_type(f8, jnp.uint8)).all()

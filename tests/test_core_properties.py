@@ -159,3 +159,54 @@ class TestBinpack:
         # no file appears in two bins
         seen = [f.path for t in tasks for f in t.inputs]
         assert len(seen) == len(set(seen))
+
+
+class TestTuneDesign:
+    """Coordinate-descent hillclimb over discrete design spaces (the
+    serve transfer x storage x block sweep's tuner)."""
+
+    def test_finds_global_optimum_of_separable_objective(self):
+        from repro.core.autotune import tune_design
+        axes = {"t": ("bf16", "int8"), "s": ("bf16", "int8", "f8"),
+                "b": (128, 256, 512)}
+        cost = {"bf16": 2.0, "int8": 1.0, "f8": 0.5}
+
+        def ev(p):
+            return cost[p["t"]] + cost[p["s"]] + 256 / p["b"]
+
+        res = tune_design(ev, axes)
+        # separable objective: coordinate descent reaches the global min
+        assert res.best_point == {"t": "int8", "s": "f8", "b": 512}
+        assert res.best_objective == pytest.approx(1.0 + 0.5 + 0.5)
+
+    def test_memoized_and_far_below_exhaustive(self):
+        from repro.core.autotune import tune_design
+        calls = []
+
+        def ev(p):
+            calls.append(tuple(sorted(p.items())))
+            return -p["a"] - p["b"]
+
+        res = tune_design(ev, {"a": tuple(range(5)), "b": tuple(range(5))})
+        assert res.best_point == {"a": 4, "b": 4}
+        assert len(calls) == len(set(calls))        # never re-evaluated
+        assert res.evaluations < 25                 # < exhaustive 5x5
+
+    def test_deterministic_and_respects_maximize(self):
+        from repro.core.autotune import tune_design
+
+        def ev(p):
+            return p["x"] * p["y"]
+
+        axes = {"x": (1, 3, 2), "y": (5, 4, 6)}
+        a = tune_design(ev, axes, minimize=False)
+        b = tune_design(ev, axes, minimize=False)
+        assert a.best_point == b.best_point == {"x": 3, "y": 6}
+        assert a.best_objective == 18
+        assert [h[0] for h in a.history] == [h[0] for h in b.history]
+
+    def test_single_point_space(self):
+        from repro.core.autotune import tune_design
+        res = tune_design(lambda p: 7.0, {"only": ("v",)})
+        assert res.best_point == {"only": "v"}
+        assert res.best_objective == 7.0 and res.evaluations == 1

@@ -152,6 +152,15 @@ class TestServeArgs:
         assert args.disagg and args.cache_transfer == "int8" \
             and args.kv_storage == "int8"
 
+    def test_stream_and_f8_flags_parse(self):
+        from repro.launch.serve import build_parser
+        args = build_parser().parse_args(
+            ["--disagg", "--stream", "slots", "--slots", "3",
+             "--cache-transfer", "int8", "--kv-storage", "f8"])
+        assert args.stream == "slots" and args.slots == 3 \
+            and args.kv_storage == "f8"
+        assert build_parser().parse_args([]).stream == "batch"
+
 
 class TestKVStorageInt8:
     """int8-resident decode cache, single-device (the sharded/transfer
@@ -200,10 +209,149 @@ class TestKVStorageInt8:
         assert abs_c["k_scale"].shape[:-1] == abs_c["k"].shape[:-1]
 
     @pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-125m"])
-    def test_recurrent_families_refuse_int8_storage(self, arch):
+    @pytest.mark.parametrize("storage", ["int8", "f8"])
+    def test_recurrent_families_refuse_quantized_storage(self, arch,
+                                                         storage):
         cfg = smoke_config(arch)
         with pytest.raises(NotImplementedError, match="kv_storage"):
-            step_lib.make_decode_step(cfg, 16, "bf16", "int8")
+            step_lib.make_decode_step(cfg, 16, "bf16", storage)
+
+
+class TestKVStorageF8:
+    """f8 (e4m3) resident decode cache: scale-free cast, same shapes as
+    bf16 at half the bytes. The sharded/report claims live in
+    tests/test_serve_disagg.py."""
+
+    @pytest.mark.parametrize("arch", ["paper-lm-100m", "minicpm3-4b"])
+    def test_f8_storage_logits_match_bf16(self, arch):
+        cfg = smoke_config(arch)
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        b, s0, total = 2, 8, 16
+        prompts = _prompts(cfg, b, s0, seed=13)
+        prefill = jax.jit(step_lib.make_prefill_step(cfg))
+        logits0, cache = prefill(params, {"tokens": jnp.asarray(prompts)})
+        cache = grow_cache(cache, transformer.abstract_cache(cfg, b, total))
+        tok = jnp.argmax(logits0, -1).astype(jnp.int32)[:, None]
+        batch = {"tokens": tok, "pos": jnp.asarray(s0, jnp.int32)}
+        out = {}
+        for storage in ("bf16", "f8"):
+            c = transformer.quantize_cache(cache, storage)
+            fn = jax.jit(step_lib.make_decode_step(cfg, total, "bf16",
+                                                   storage))
+            lg, new_c = fn(params, c, batch)
+            # the step emits the same storage layout it consumed
+            assert jax.tree.structure(new_c) == jax.tree.structure(c)
+            if storage == "f8":
+                from repro.dist.collectives import F8_DTYPE
+                quant_keys = [k for k in new_c
+                              if k in transformer.QUANTIZABLE_CACHE_KEYS]
+                assert quant_keys
+                for k in quant_keys:
+                    assert new_c[k].dtype == F8_DTYPE
+            out[storage] = np.asarray(lg, np.float32)
+        scale = max(np.abs(out["bf16"]).max(), 1.0)
+        assert np.abs(out["bf16"] - out["f8"]).max() / scale < 0.08
+
+    def test_f8_storage_generate_tracks_bf16_tokens(self, dense):
+        cfg, params = dense
+        prompts = _prompts(cfg, 3, 10, seed=17)
+        base = generate(cfg, params, prompts, max_new=8)
+        quant = generate(cfg, params, prompts, max_new=8, kv_storage="f8")
+        rows_equal = (base == quant).all(axis=1)
+        assert rows_equal.mean() >= 0.5, (base, quant)
+
+    def test_f8_storage_cache_layout_scale_free_half_bytes(self):
+        from repro.dist.collectives import F8_DTYPE
+        cfg = smoke_config("paper-lm-100m")
+        bf = transformer.abstract_cache(cfg, 2, 16)
+        f8 = transformer.abstract_cache(cfg, 2, 16, kv_storage="f8")
+        assert set(f8) == set(bf)                  # no _scale companions
+        assert f8["k"].dtype == F8_DTYPE and f8["k"].shape == bf["k"].shape
+
+        def nbytes(tree):
+            return sum(np.prod(l.shape) * l.dtype.itemsize
+                       for l in jax.tree.leaves(tree))
+        assert nbytes(f8) == nbytes(bf) / 2
+
+
+class TestSlotStreaming:
+    """Continuous slot-level streaming, single device (the disagg mesh
+    claims live in tests/test_serve_disagg.py): admission into a running
+    decode batch must reproduce the whole-batch path token-for-token,
+    including when a small slot table forces slots to be freed and
+    reused across admissions."""
+
+    def test_slot_stream_matches_batch_ragged(self, dense):
+        cfg, params = dense
+        prompts = _prompts(cfg, 3, 12, seed=3)
+        lens = np.array([5, 12, 9], np.int32)
+        batch = generate(cfg, params, prompts, max_new=6, prompt_lens=lens)
+        slot = generate(cfg, params, prompts, max_new=6, prompt_lens=lens,
+                        stream="slots")
+        assert (batch == slot).all(), (batch, slot)
+
+    def test_slot_reuse_no_cross_request_bleed(self, dense):
+        """slots=1 serializes every request through ONE slot row — each
+        admission must fully overwrite the previous occupant."""
+        cfg, params = dense
+        prompts = _prompts(cfg, 4, 10, seed=23)
+        lens = np.array([4, 10, 7, 9], np.int32)
+        batch = generate(cfg, params, prompts, max_new=5, prompt_lens=lens)
+        for n_slots in (1, 2):
+            slot = generate(cfg, params, prompts, max_new=5,
+                            prompt_lens=lens, stream="slots", slots=n_slots)
+            assert (batch == slot).all(), (n_slots, batch, slot)
+
+    def test_slot_stream_uniform_and_quantized_pipeline(self, dense):
+        cfg, params = dense
+        prompts = _prompts(cfg, 3, 8, seed=29)
+        batch = generate(cfg, params, prompts, max_new=5)
+        slot = generate(cfg, params, prompts, max_new=5, stream="slots")
+        assert (batch == slot).all()
+        # the fully quantized continuous pipeline still produces sane,
+        # mostly-agreeing tokens (lossy: s8 wire + f8-resident cache)
+        q = generate(cfg, params, prompts, max_new=5, stream="slots",
+                     cache_transfer="int8", kv_storage="f8")
+        assert q.shape == batch.shape
+        assert ((q >= 0) & (q < cfg.vocab)).all()
+        assert (batch == q).all(axis=1).mean() >= 0.5
+
+    def test_single_token_requests_all_served(self, dense):
+        """max_new=1: each request IS its prefill token, so every slot
+        frees at admission — the loop must keep refilling the table
+        instead of breaking with requests unserved."""
+        cfg, params = dense
+        prompts = _prompts(cfg, 5, 8, seed=37)
+        batch = generate(cfg, params, prompts, max_new=1)
+        slot = generate(cfg, params, prompts, max_new=1, stream="slots",
+                        slots=2)
+        assert slot.shape == (5, 1)
+        assert (batch == slot).all(), (batch, slot)
+
+    def test_slot_stream_sampling_is_deterministic(self, dense):
+        cfg, params = dense
+        prompts = _prompts(cfg, 3, 8, seed=31)
+        one = generate(cfg, params, prompts, max_new=5, temperature=0.8,
+                       seed=42, stream="slots", slots=2)
+        two = generate(cfg, params, prompts, max_new=5, temperature=0.8,
+                       seed=42, stream="slots", slots=2)
+        assert (one == two).all()
+
+    @pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-125m"])
+    def test_slot_stream_refused_for_ring_and_recurrent(self, arch):
+        """Slot admission decodes every request from its own position —
+        the ragged machinery — so the same families refuse."""
+        cfg = smoke_config(arch)
+        params = transformer.init_params(cfg, jax.random.PRNGKey(2))
+        with pytest.raises(NotImplementedError, match="slot"):
+            generate(cfg, params, _prompts(cfg, 2, 10), max_new=2,
+                     stream="slots")
+
+    def test_unknown_stream_refused(self, dense):
+        cfg, params = dense
+        with pytest.raises(ValueError, match="stream"):
+            generate(cfg, params, _prompts(cfg, 2, 8), max_new=2,
+                     stream="rows")
 
 
 class TestDisaggActTransport:

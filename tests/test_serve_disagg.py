@@ -4,13 +4,17 @@ CI ``multidevice`` job runs this under
 
 Prefill compiles sequence-parallel (``serve_sp``) on its own mesh, decode
 batch-heavy (``serve_decode``) on a disjoint mesh, and the KV cache is
-handed off between them — raw bf16 or as a seq-blockwise int8 stream
-(``--cache-transfer``), with an orthogonal int8-*resident* storage arm
-(``--kv-storage``). Assertions mirror the acceptance criteria: resolved
-decode-side shardings, s8 on the transfer wire (< bf16/1.5, HLO-parsed),
-token-for-token colocated-vs-disaggregated equivalence for the bf16
-stream, logit tolerance for int8 storage, and all four transfer x storage
-dryrun combinations. Skipped below 8 devices."""
+handed off between them — whole-batch (raw bf16 or a seq-blockwise int8
+stream, ``--cache-transfer``) or continuously per request
+(``--stream slots``: slot admission into a running decode batch), with
+orthogonal int8/f8 *resident* storage arms (``--kv-storage``).
+Assertions mirror the acceptance criteria: resolved decode-side
+shardings, s8 on the transfer wire (< bf16/1.5, HLO-parsed),
+token-for-token colocated-vs-slot-streamed equivalence for the bf16
+stream (slots freed and reused without cross-request bleed), logit
+tolerance for int8/f8 storage, f8 residency exactly half of bf16, and
+the full transfer x storage x block dryrun report (per-slot wire,
+overlap fractions, tuned point). Skipped below 8 devices."""
 
 import jax
 import jax.numpy as jnp
@@ -185,26 +189,145 @@ class TestInt8StorageLogits:
         assert agree.mean() >= 0.9
 
 
+class TestSlotStreaming:
+    """Continuous cross-batch disaggregation on the real meshes: the
+    acceptance criterion — slot-streamed serving (bf16 stream) produces
+    greedy tokens identical to colocated serving, slots are freed and
+    reused across admissions without cross-request cache bleed."""
+
+    def test_slot_stream_token_identical_to_colocated(self, cfg, mesh,
+                                                      disagg_meshes, setup):
+        params, prompts, lens = setup
+        pre, dec = disagg_meshes
+        colo = serve.generate(cfg, params, prompts, max_new=12,
+                              prompt_lens=lens, mesh=mesh)
+        slot = serve.generate(cfg, params, prompts, max_new=12,
+                              prompt_lens=lens, mesh=pre, decode_mesh=dec,
+                              stream="slots")
+        assert (colo == slot).all(), (colo, slot)
+
+    def test_slots_freed_and_reused_without_bleed(self, cfg, mesh,
+                                                  disagg_meshes, setup):
+        """slots=3 < batch=8 forces five admissions into freed rows —
+        every later occupant's tokens must still match the whole-batch
+        run (admission overwrites the entire slot row, so no trace of
+        the previous request survives)."""
+        params, prompts, lens = setup
+        pre, dec = disagg_meshes
+        colo = serve.generate(cfg, params, prompts, max_new=12,
+                              prompt_lens=lens, mesh=mesh)
+        slot = serve.generate(cfg, params, prompts, max_new=12,
+                              prompt_lens=lens, mesh=pre, decode_mesh=dec,
+                              stream="slots", slots=3)
+        assert (colo == slot).all(), (colo, slot)
+        assert serve._generate_slots.last_stats["admissions"] == 8
+
+    def test_quantized_slot_pipeline_tracks_bf16(self, cfg, disagg_meshes,
+                                                 setup):
+        """The fully continuous quantized pipeline — s8 slice stream into
+        an f8-resident running cache — stays row-wise close to bf16."""
+        params, prompts, lens = setup
+        pre, dec = disagg_meshes
+        base = serve.generate(cfg, params, prompts, max_new=12,
+                              prompt_lens=lens, mesh=pre, decode_mesh=dec,
+                              stream="slots")
+        quant = serve.generate(cfg, params, prompts, max_new=12,
+                               prompt_lens=lens, mesh=pre, decode_mesh=dec,
+                               stream="slots", cache_transfer="int8",
+                               kv_storage="f8")
+        rows_equal = (base == quant).all(axis=1)
+        assert rows_equal.mean() >= 0.5, (base, quant)
+
+
+class TestF8StorageOnMesh:
+    def test_f8_storage_matches_bf16_logits(self, cfg, mesh):
+        """kv_storage="f8" decode matches the bf16-resident decode's
+        logits within e4m3 tolerance, on the decode mesh."""
+        params = transformer.init_params(cfg, jax.random.PRNGKey(1))
+        b, s0, total = 8, 16, 32
+        rules = shd.PRESETS["serve_decode"]
+        prompts = np.random.RandomState(1).randint(
+            0, cfg.vocab, size=(b, s0)).astype(np.int32)
+        with shd.axis_rules(mesh, rules):
+            p_shard = shd.tree_shardings(transformer.abstract_params(cfg),
+                                         transformer.param_axes(cfg),
+                                         mesh, rules)
+            placed = jax.device_put(params, p_shard)
+            _, cache = jax.jit(step_lib.make_prefill_step(cfg))(
+                placed, {"tokens": jnp.asarray(prompts)})
+            cache = serve.grow_cache(
+                cache, transformer.abstract_cache(cfg, b, total))
+            tok = jnp.full((b, 1), 7, jnp.int32)
+            batch = {"tokens": tok, "pos": jnp.asarray(s0, jnp.int32)}
+            logits = {}
+            for storage in ("bf16", "f8"):
+                c = jax.jit(lambda x, s=storage:
+                            transformer.quantize_cache(x, s))(cache)
+                fn = step_lib.make_decode_step(cfg, total, "bf16", storage)
+                lg, _ = jax.jit(fn)(placed, c, batch)
+                logits[storage] = np.asarray(lg, np.float32)
+        diff = np.abs(logits["bf16"] - logits["f8"]).max()
+        scale = max(np.abs(logits["bf16"]).max(), 1.0)
+        assert diff / scale < 0.08, diff
+        agree = (logits["bf16"].argmax(-1) == logits["f8"].argmax(-1))
+        assert agree.mean() >= 0.9
+
+
 class TestDisaggDryrunReport:
     @pytest.fixture(scope="class")
     def report(self, cfg, mesh):
-        return serve.disagg_decode_report(cfg, BATCH, TOTAL, mesh)
+        return serve.disagg_decode_report(cfg, BATCH, TOTAL, mesh,
+                                          blocks=(256, 128))
 
-    def test_all_four_combinations_reported(self, report):
-        assert set(report["cells"]) == {"bf16xbf16", "bf16xint8",
-                                        "int8xbf16", "int8xint8"}
+    def test_all_six_combinations_reported(self, report):
+        assert set(report["cells"]) == {
+            f"{t}x{s}" for t in ("bf16", "int8")
+            for s in ("bf16", "int8", "f8")}
         assert report["unsupported_storage"] == []
         for cell in report["cells"].values():
             assert cell["collective_s"] >= 0
             assert cell["cache_resident_bytes_per_device"] > 0
+            assert 0.0 <= cell["slot_stream_overlap_frac"] <= 1.0
 
-    def test_int8_storage_shrinks_resident_bytes(self, report):
+    def test_quantized_storage_shrinks_resident_bytes(self, report):
         cells = report["cells"]
-        assert cells["bf16xint8"]["cache_resident_bytes_per_device"] \
-            < cells["bf16xbf16"]["cache_resident_bytes_per_device"]
+        bf16 = cells["bf16xbf16"]["cache_resident_bytes_per_device"]
+        assert cells["bf16xint8"]["cache_resident_bytes_per_device"] < bf16
+        # f8 is scale-free: exactly half the bf16 bytes — the acceptance
+        # criterion's residency claim
+        assert cells["bf16xf8"]["cache_resident_bytes_per_device"] \
+            == bf16 // 2
 
     def test_int8_transfer_shrinks_transfer_wire(self, report):
         cells = report["cells"]
         assert cells["int8xbf16"]["transfer_wire_bytes_bf16eq"] \
             <= cells["bf16xbf16"]["transfer_wire_bytes_bf16eq"] / 1.5
         assert cells["int8xbf16"]["transfer_wire_bytes_bf16eq_s8"] > 0
+
+    def test_slot_stream_wire_is_per_request_sized(self, report):
+        """The per-slot admission program ships ONE request's slice: its
+        wire is ~1/BATCH of the whole-batch transfer, s8-dominant under
+        the int8 stream and < bf16/1.5."""
+        ss = report["slot_stream"]
+        cells = report["cells"]
+        for t in ("bf16", "int8"):
+            assert 0 < ss[t]["wire_bytes_bf16eq"] \
+                <= cells[f"{t}xbf16"]["transfer_wire_bytes_bf16eq"] / 2
+        assert ss["int8"]["wire_bytes_bf16eq_s8"] \
+            > ss["int8"]["wire_bytes_bf16eq"] / 2
+        assert ss["int8"]["wire_bytes_bf16eq"] \
+            <= ss["bf16"]["wire_bytes_bf16eq"] / 1.5
+
+    def test_block_sweep_and_tuned_point(self, report):
+        """Smaller stream blocks mean more f32 scales on the wire; the
+        hillclimb's pick is a member of the swept space."""
+        sweep = report["block_sweep"]["int8"]
+        assert set(sweep) == {128, 256}
+        assert sweep[128]["transfer_wire_bytes_bf16eq"] \
+            >= sweep[256]["transfer_wire_bytes_bf16eq"]
+        tuned = report["tuned"]
+        assert tuned["point"]["cache_transfer"] in ("bf16", "int8")
+        assert tuned["point"]["kv_storage"] in ("bf16", "int8", "f8")
+        assert tuned["point"]["block"] in (128, 256)
+        assert tuned["collective_s"] > 0
+        assert tuned["evaluations"] >= 1
