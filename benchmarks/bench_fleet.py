@@ -1,130 +1,185 @@
-"""Fig. 10 + §7 — production fleet simulation.
+"""Fleet-scale compaction benchmark: ~2k tables under one GBHr budget.
 
-Weekly rollout schedule as deployed at LinkedIn:
-  weeks 1-2:   MANUAL compaction — a FIXED list of "known-bad" tables chosen
-               once up front (the paper's k~100 hand-picked tables), re-
-               compacted every cycle (diminishing returns);
-  weeks 3-5:   AutoComp, top-k=10 over the WHOLE fleet (MOOP ranking with
-               quota-adaptive w1) — adapts to where fragmentation actually
-               is;
-  week 6:      AutoComp, dynamic k under a GBHr budget (select_budget).
+Drives the Arc-style small-file storm (``FleetSpec``: a storm fraction
+ingesting tens of files per write, bursty interactive tables, a cold long
+tail) against the ``FleetScheduler`` for N cycles and reports the
+end-state the nightly gate cares about:
 
-Reports files removed + compute per week (Fig. 10a/b), the file-count
-trajectory (Fig. 10c), and the §7 model-accuracy comparison of predicted
-ΔF_c / GBHr_c vs actuals (table-scope estimates overestimate on partitioned
-tables because execution cannot merge across partitions)."""
+  fleet_p99_query_s            p99 client read latency in the final cycle
+                               (the small-file pain queries actually feel)
+  fleet_file_count_final       total files across the fleet at the end
+  fleet_gbhr_total             compaction compute actually spent
+  fleet_starvation_max_cycles  worst aging any fragmented table saw
+
+``--json`` writes a BENCH_roofline-shaped artifact ({"records": [...]})
+whose cell key encodes the fleet size, so the PR-smoke small fleet and the
+nightly 2k-table storm each keep their own regression lineage in
+``scripts/bench_diff.py``.
+
+CLI::
+
+  PYTHONPATH=src python benchmarks/bench_fleet.py \
+      --tables 2000 --cycles 4 --storm-frac 0.15 --budget 12 \
+      --json BENCH_fleet.json
+"""
 
 from __future__ import annotations
 
-from typing import List
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from benchmarks.workload_sim import make_pipeline
-from repro.core.decide import quota_adaptive_weights
-from repro.core.model import Scope, generate_candidates
-from repro.core.orient import compute_traits
-from repro.lst import Catalog, InMemoryStore
-from repro.lst.workload import SimClock, WorkloadGenerator, WorkloadSpec
+if __package__ in (None, ""):               # `python benchmarks/bench_fleet.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.workload_sim import make_fleet
+from repro.lst.workload import FleetSpec
 
 MB = 1 << 20
-TARGET = 512 * MB
 
 
-def main(weeks: int = 6, hours_per_week: int = 2) -> List[str]:
-    clock = SimClock()
-    store = InMemoryStore()
-    catalog = Catalog(store, now_fn=clock.now)
-    gen = WorkloadGenerator(catalog, WorkloadSpec(
-        n_databases=5, tables_per_db=8, seed=5), clock)
-    gen.setup()
+def run_fleet(n_tables: int = 200, cycles: int = 4, seed: int = 0,
+              storm_fraction: float = 0.15, budget_gbhr: float = 12.0,
+              starvation_cycles: int = 4,
+              substeps: int = 1) -> Dict[str, Any]:
+    fspec = FleetSpec(n_tables=n_tables, storm_fraction=storm_fraction,
+                      tables_per_db=min(50, max(4, n_tables // 8)),
+                      seed=seed)
+    clock, catalog, gen, tracker, fleet = make_fleet(
+        fspec, budget_gbhr=budget_gbhr,
+        starvation_cycles=starvation_cycles)
 
-    rows: List[str] = []
-    weekly_removed, weekly_gbhr, trajectory = [], [], []
-    pred_err_files, pred_err_gbhr = [], []
+    per_cycle: List[Dict[str, Any]] = []
+    last_read_lat: List[float] = []
+    for cyc in range(cycles):
+        events = gen.run_hour(substeps=substeps)
+        tracker.record(events)
+        rep = fleet.run_cycle()
+        last_read_lat = sorted(e.latency for e in events
+                               if e.kind == "read") or [0.0]
+        per_cycle.append({
+            "cycle": cyc + 1,
+            "file_count": gen.total_file_count(),
+            "candidates": rep.n_candidates,
+            "selected": rep.n_selected,
+            "spent_gbhr": rep.spent_gbhr,
+            "gbhr": rep.gbhr,
+            "files_removed": rep.files_removed,
+            "max_skip_cycles": rep.max_skip_cycles,
+            "class_counts": rep.class_counts,
+            "wall_s": rep.wall_s,
+        })
 
-    # manual: choose the most fragmented ~1/3 of the fleet ONCE
-    by_frag = sorted(catalog.tables(),
-                     key=lambda t: -sum(1 for f in t.current_files()
-                                        if f.size_bytes < TARGET))
-    manual_list = by_frag[: max(3, len(by_frag) // 3)]
-    manual_pipe = make_pipeline("table", k=len(manual_list))
-    auto_pipe = make_pipeline("table", k=10)
-    auto_pipe.weights_fn = lambda c: quota_adaptive_weights(
-        catalog.namespace_of(c.table).used_quota(),
-        catalog.namespace_of(c.table).total_quota)
-    budget_pipe = make_pipeline("hybrid", k=2500, budget=3.0)
+    def pct(lat: List[float], p: float) -> float:
+        return lat[min(len(lat) - 1, int(p * len(lat)))]
 
-    for week in range(1, weeks + 1):
-        for _ in range(hours_per_week):
-            gen.run_hour()
-        if week <= 2:
-            pipe, mode, tables = manual_pipe, "manual-fixed", manual_list
-        elif week <= 5:
-            pipe, mode, tables = auto_pipe, "auto-k10", None
-        else:
-            pipe, mode, tables = budget_pipe, "auto-dynamic-k(budget)", None
+    collectors = [p.stats for p in fleet.pipelines.values()]
+    hits = sum(c.memo_hits for c in collectors)
+    misses = sum(c.memo_misses for c in collectors)
+    totals = fleet.totals()
+    return {
+        "n_tables": n_tables,
+        "cycles": cycles,
+        "seed": seed,
+        "per_cycle": per_cycle,
+        "fleet_p99_query_s": pct(last_read_lat, 0.99),
+        "fleet_p50_query_s": pct(last_read_lat, 0.50),
+        "fleet_file_count_final": gen.total_file_count(),
+        "fleet_small_frac_final": gen.small_file_fraction(
+            fspec.target_file_mb * MB),
+        "fleet_gbhr_total": totals["gbhr"],
+        "fleet_starvation_max_cycles": totals["max_skip_cycles"],
+        "fleet_files_removed_total": totals["files_removed"],
+        "fleet_observe_memo_hit_rate":
+            hits / max(1, hits + misses),
+        "fleet_cycle_wall_s": float(np.mean(
+            [p["wall_s"] for p in per_cycle])),
+    }
 
-        # record predictions before acting (§7 model accuracy)
-        cands = generate_candidates(
-            tables if tables is not None else catalog.tables(),
-            hybrid=pipe.hybrid)
-        pipe.stats.observe_all(cands)
-        compute_traits(cands, pipe.traits, pipe.trait_ctx)
-        pred = {c.key: (c.traits["file_count_reduction"],
-                        c.traits["compute_cost"]) for c in cands}
 
-        rep = pipe.run_cycle(catalog, tables=tables)
-        removed = rep.files_removed - rep.act.files_added
-        weekly_removed.append(removed)
-        weekly_gbhr.append(rep.gbhr)
-        trajectory.append(gen.total_file_count())
-        rows.append(f"fig10_week{week}[{mode}],{removed},"
-                    f"gbhr={rep.gbhr:.4f};k={rep.n_selected};"
-                    f"file_count={gen.total_file_count()}")
+# the roofline keys bench_diff gates for this cell
+ARTIFACT_KEYS = ("fleet_p99_query_s", "fleet_file_count_final",
+                 "fleet_gbhr_total", "fleet_starvation_max_cycles")
 
-        # accuracy: actuals per (table, partition-scope) candidate
-        actual = {}
-        for r in rep.act.results:
-            key = (r.task.table_id, r.task.scope or "")
-            a = actual.setdefault(key, [0, 0.0])
-            a[0] += r.files_removed - r.files_added
-            a[1] += r.gbhr
-        sel = set(rep.selected_keys)
-        for c in cands:
-            if c.key not in sel or pred[c.key][0] <= 0:
-                continue
-            if c.scope == Scope.PARTITION:
-                act = actual.get((c.table.table_id, c.partition or ""), [0, 0.0])
-            else:  # table scope: sum across its partitions
-                act = [0, 0.0]
-                for (tid, _), a in actual.items():
-                    if tid == c.table.table_id:
-                        act[0] += a[0]
-                        act[1] += a[1]
-            pred_err_files.append(
-                abs(pred[c.key][0] - act[0]) / max(pred[c.key][0], 1))
-            if pred[c.key][1] > 0:
-                pred_err_gbhr.append(
-                    abs(pred[c.key][1] - act[1]) / pred[c.key][1])
 
-    manual_avg = np.mean(weekly_removed[:2])
-    auto_avg = np.mean(weekly_removed[2:5])
-    rows.append(f"fig10_removed_auto_over_manual,"
-                f"{auto_avg/max(manual_avg,1):.2f},"
-                f"manual_avg={manual_avg:.0f};auto_avg={auto_avg:.0f};"
-                f"manual_tables={len(manual_list)}")
-    rows.append(f"fig10c_file_count_trajectory,{trajectory[-1]},"
-                f"weekly={'|'.join(map(str, trajectory))}")
-    if pred_err_files:
-        rows.append(f"s7_model_accuracy_file_reduction_err,"
-                    f"{float(np.mean(pred_err_files)):.3f},n={len(pred_err_files)}")
-    if pred_err_gbhr:
-        rows.append(f"s7_model_accuracy_gbhr_err,"
-                    f"{float(np.mean(pred_err_gbhr)):.3f},n={len(pred_err_gbhr)}")
+def to_record(res: Dict[str, Any]) -> Dict[str, Any]:
+    """One BENCH_roofline-shaped record; the shape encodes the fleet size
+    so differently-sized runs never diff against each other."""
+    roofline = {k: float(res[k]) for k in ARTIFACT_KEYS}
+    roofline["fleet_small_frac_final"] = float(res["fleet_small_frac_final"])
+    roofline["fleet_observe_memo_hit_rate"] = \
+        float(res["fleet_observe_memo_hit_rate"])
+    return {
+        "arch": "fleet-sim",
+        "shape": f"fleet_{res['n_tables']}t_{res['cycles']}c",
+        "mesh": None, "preset": "fleet",
+        "grad_transport": None, "act_transport": None,
+        "microbatches": None, "remat_block": None, "capacity_factor": None,
+        "status": "ok",
+        "roofline": roofline,
+    }
+
+
+def main(n_tables: int = 64, cycles: int = 3, seed: int = 0) -> List[str]:
+    """benchmarks.run entry point: small-fleet rows, CSV-ish."""
+    res = run_fleet(n_tables=n_tables, cycles=cycles, seed=seed,
+                    budget_gbhr=4.0)
+    rows = [
+        f"fleet_p99_query_s,{res['fleet_p99_query_s']:.4f},"
+        f"tables={n_tables};cycles={cycles}",
+        f"fleet_file_count_final,{res['fleet_file_count_final']},"
+        f"small_frac={res['fleet_small_frac_final']:.3f}",
+        f"fleet_gbhr_total,{res['fleet_gbhr_total']:.4f},"
+        f"files_removed={res['fleet_files_removed_total']}",
+        f"fleet_starvation_max_cycles,{res['fleet_starvation_max_cycles']},"
+        f"bound=4",
+        f"fleet_observe_memo_hit_rate,"
+        f"{res['fleet_observe_memo_hit_rate']:.3f},"
+        f"sub-linear re-observation",
+    ]
     return rows
 
 
+def cli(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tables", type=int, default=200)
+    ap.add_argument("--cycles", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--storm-frac", type=float, default=0.15)
+    ap.add_argument("--budget", type=float, default=12.0,
+                    help="shared GBHr budget per cycle")
+    ap.add_argument("--starvation-cycles", type=int, default=4)
+    ap.add_argument("--json", default=None,
+                    help="write a BENCH_roofline-shaped artifact here")
+    args = ap.parse_args(argv)
+
+    res = run_fleet(n_tables=args.tables, cycles=args.cycles,
+                    seed=args.seed, storm_fraction=args.storm_frac,
+                    budget_gbhr=args.budget,
+                    starvation_cycles=args.starvation_cycles)
+    for row in (f"{k},{res[k]}" for k in (
+            "fleet_p99_query_s", "fleet_file_count_final",
+            "fleet_gbhr_total", "fleet_starvation_max_cycles",
+            "fleet_small_frac_final", "fleet_observe_memo_hit_rate",
+            "fleet_cycle_wall_s")):
+        print(row)
+    if args.json:
+        payload = {"cells": 1, "records": [to_record(res)],
+                   "config": {"tables": args.tables, "cycles": args.cycles,
+                              "seed": args.seed,
+                              "storm_frac": args.storm_frac,
+                              "budget_gbhr": args.budget}}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.json}")
+    return 0
+
+
 if __name__ == "__main__":
-    for r in main():
-        print(r)
+    import sys
+    sys.exit(cli())

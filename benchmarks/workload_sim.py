@@ -22,19 +22,40 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import (AutoCompPipeline, MoopRanker, StatsCollector,
-                        TraitContext)
+from repro.core import (AutoCompPipeline, FleetScheduler, MoopRanker,
+                        StatsCollector, TraitContext)
 from repro.core.act import Scheduler
 from repro.core.decide import ThresholdPolicy
 from repro.core.model import Scope
 from repro.core.orient import (ComputeCostTrait, FileCountReductionTrait,
                                FileEntropyTrait)
 from repro.lst import Catalog, InMemoryStore
-from repro.lst.workload import (CostModel, SimClock, WorkloadGenerator,
-                                WorkloadSpec)
+from repro.lst.workload import (ActivityTracker, CostModel, FleetSpec,
+                                SimClock, WorkloadGenerator, WorkloadSpec)
 
 MB = 1 << 20
 TARGET = 512 * MB
+
+
+def make_fleet(fspec: FleetSpec, budget_gbhr: float,
+               warmup_hours: int = 1, starvation_cycles: int = 4,
+               **fleet_kw):
+    """Build a fleet world: storm-mix workload + ActivityTracker wired into
+    the scheduler's observe phase. Returns (clock, catalog, gen, tracker,
+    fleet) after ``warmup_hours`` of ingestion so classification has
+    activity to read."""
+    clock = SimClock()
+    store = InMemoryStore()
+    catalog = Catalog(store, now_fn=clock.now)
+    gen = WorkloadGenerator(catalog, WorkloadSpec(seed=fspec.seed), clock)
+    gen.setup_fleet(fspec)
+    tracker = ActivityTracker(now_fn=clock.now)
+    for _ in range(warmup_hours):
+        tracker.record(gen.run_hour(substeps=1))
+    fleet = FleetScheduler(catalog, budget_gbhr=budget_gbhr,
+                           activity=tracker,
+                           starvation_cycles=starvation_cycles, **fleet_kw)
+    return clock, catalog, gen, tracker, fleet
 
 
 def make_pipeline(scope: str, k: int, target: int = TARGET,

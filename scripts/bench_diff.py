@@ -64,6 +64,16 @@ for _t in _TRANSFERS:
         METRICS[f"slot_stream_overlap_frac_{_t}x{_s}"] = "higher"
 METRICS["disagg_tuned_collective_s"] = "lower"
 
+# Fleet-scale compaction cells (arch "fleet-sim", benchmarks/bench_fleet.py).
+# All lower-is-better: the simulated storm is seeded, so drift means a
+# behavior change in the scheduler, not noise. p99 read latency and final
+# file count are the user-facing outcomes; gbhr_total bounds compute burn
+# under the shared budget; starvation_max_cycles gates the aging invariant
+# (a scheduler change that lets fragmented tables wait longer must fail).
+for _m in ("fleet_p99_query_s", "fleet_file_count_final",
+           "fleet_gbhr_total", "fleet_starvation_max_cycles"):
+    METRICS[_m] = "lower"
+
 DEFAULT_THRESHOLD = 0.15
 
 

@@ -16,8 +16,11 @@ from repro.core.orient import (  # noqa: F401
     ComputeCostTrait, FileCountReductionTrait, FileEntropyTrait, TraitContext,
 )
 from repro.core.decide import (  # noqa: F401
-    MoopRanker, ThresholdPolicy, quota_adaptive_weights, select_budget,
-    select_topk,
+    BudgetSelection, MoopRanker, ThresholdPolicy, TopKSelection,
+    quota_adaptive_weights, select_budget, select_topk,
 )
 from repro.core.ooda import AutoCompPipeline, CycleReport  # noqa: F401
+from repro.core.fleet import (  # noqa: F401
+    ClassProfile, FleetCycleReport, FleetScheduler, classify_table,
+)
 from repro.core.service import AutoCompService  # noqa: F401

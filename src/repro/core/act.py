@@ -22,6 +22,10 @@ from repro.lst.compaction import CompactionResult, CompactionTask
 @dataclasses.dataclass
 class ActReport:
     results: List[CompactionResult] = dataclasses.field(default_factory=list)
+    # candidates selected by decide but NOT executed this call (e.g. the
+    # off-peak window was closed) — reported so the caller can requeue them
+    # next cycle instead of silently losing the selection
+    deferred: List[Candidate] = dataclasses.field(default_factory=list)
 
     @property
     def files_removed(self) -> int:
@@ -102,6 +106,7 @@ class Scheduler:
         """
         report = ActReport()
         if self.offpeak_window is not None and not self.offpeak_window():
+            report.deferred = list(selected)
             return report
         by_table: Dict[str, List[Candidate]] = {}
         for c in selected:

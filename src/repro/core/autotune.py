@@ -72,19 +72,21 @@ class DesignResult:
 def tune_design(evaluate: Callable[[Dict[str, object]], float],
                 axes: Dict[str, Sequence],
                 minimize: bool = True,
-                max_rounds: int = 8) -> DesignResult:
+                max_rounds: int = 8,
+                start: Optional[Dict[str, object]] = None) -> DesignResult:
     """Coordinate-descent hillclimb over a *discrete* design space.
 
     ``axes`` maps each knob to its ordered candidate values (e.g.
     ``{"cache_transfer": ("bf16", "int8"), "kv_storage": ("bf16", "int8",
     "f8"), "block": (128, 256, 512)}`` — the serve-path transfer x storage
     x block space the dryrun sweeps). Starting from the first value of
-    every axis, each round walks the axes in declaration order and moves
-    one coordinate at a time to its best value with the others held fixed;
-    the climb stops at the first round that moves nothing. Deterministic
-    (axis and value order fix the walk) and memoized, so a point is never
-    evaluated twice — with N axes of k values each, at most 1 + rounds *
-    N * (k - 1) evaluations instead of k**N.
+    every axis (or from ``start``, e.g. an incumbent fleet class profile
+    being re-tuned warm), each round walks the axes in declaration order
+    and moves one coordinate at a time to its best value with the others
+    held fixed; the climb stops at the first round that moves nothing.
+    Deterministic (axis and value order fix the walk) and memoized, so a
+    point is never evaluated twice — with N axes of k values each, at most
+    1 + rounds * N * (k - 1) evaluations instead of k**N.
     """
     sign = 1.0 if minimize else -1.0
     history: List[Tuple[Dict[str, object], float]] = []
@@ -99,6 +101,10 @@ def tune_design(evaluate: Callable[[Dict[str, object]], float],
         return memo[key]
 
     best = {a: vals[0] for a, vals in axes.items()}
+    if start is not None:
+        for a, vals in axes.items():
+            if a in start and start[a] in vals:
+                best[a] = start[a]
     best_s = ev(best)
     rounds = 0
     for _ in range(max_rounds):

@@ -98,16 +98,62 @@ def select_topk(ranked: Sequence[Candidate], k: int) -> List[Candidate]:
 
 def select_budget(ranked: Sequence[Candidate], budget_gbhr: float,
                   cost_trait: str = "compute_cost",
-                  max_k: Optional[int] = None) -> List[Candidate]:
+                  max_k: Optional[int] = None,
+                  unpriced: Optional[List[Candidate]] = None
+                  ) -> List[Candidate]:
     """Greedy: fit as many high-priority tasks as possible in the budget
-    (§4.3). Deterministic; skips items that don't fit and keeps going."""
+    (§4.3). Deterministic; skips items that don't fit and keeps going.
+
+    A candidate MISSING the cost trait is conservative-skipped (and
+    collected into ``unpriced`` when a list is passed): unpriced work must
+    never bypass the budget by defaulting to free. An explicit cost of
+    0.0 is priced-free and still admissible.
+    """
     out: List[Candidate] = []
     spent = 0.0
     for c in ranked:
-        cost = c.traits.get(cost_trait, 0.0)
+        cost = c.traits.get(cost_trait)
+        if cost is None:
+            if unpriced is not None:
+                unpriced.append(c)
+            continue
         if spent + cost <= budget_gbhr:
             out.append(c)
             spent += cost
         if max_k is not None and len(out) >= max_k:
             break
     return out
+
+
+# -- injectable selection strategies (the decide tail of the OODA loop) ------
+#
+# ``AutoCompPipeline`` and ``FleetScheduler`` both end their decide phase in
+# one of these objects; the pipeline builds a default from its legacy
+# ``top_k``/``budget_gbhr`` knobs, the fleet layer injects a shared-budget
+# selection over the pooled candidates of many pipelines.
+
+@dataclasses.dataclass
+class TopKSelection:
+    """Fixed-k selection (the paper's rollout weeks 3-5)."""
+    k: Optional[int] = None
+
+    def select(self, ranked: Sequence[Candidate]) -> List[Candidate]:
+        return select_topk(ranked, self.k if self.k is not None
+                           else len(ranked))
+
+
+@dataclasses.dataclass
+class BudgetSelection:
+    """Dynamic-k under a GBHr budget (§7 week 6+). Records the unpriced
+    candidates it conservatively skipped in ``last_unpriced``."""
+    budget_gbhr: float
+    max_k: Optional[int] = None
+    cost_trait: str = "compute_cost"
+    last_unpriced: List[Candidate] = dataclasses.field(
+        default_factory=list, repr=False)
+
+    def select(self, ranked: Sequence[Candidate]) -> List[Candidate]:
+        self.last_unpriced = []
+        return select_budget(ranked, self.budget_gbhr,
+                             cost_trait=self.cost_trait, max_k=self.max_k,
+                             unpriced=self.last_unpriced)

@@ -7,12 +7,20 @@ Runs the OODA pipeline either
 
 Also owns the production rollout policy from §7: fixed top-k during rollout,
 then dynamic k constrained by the compaction budget (select_budget).
+
+The service drives any *planner* exposing ``run_cycle(catalog, tables=...)``
+— a single ``AutoCompPipeline`` (one pool) or a
+``core.fleet.FleetScheduler`` (cross-table decide/act over many per-class
+pipelines under a shared budget); their reports are shape-compatible.
+Candidates the act phase deferred (e.g. a closed off-peak window) are
+requeued: their tables re-enter the next cycle's pool even in
+``after_write`` mode where only dirty tables are normally re-evaluated.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Set
 
 from repro.core.ooda import AutoCompPipeline, CycleReport
 from repro.core.triggers import OptimizeAfterWriteHook, PeriodicTrigger
@@ -27,29 +35,35 @@ class ServiceConfig:
 
 
 class AutoCompService:
-    def __init__(self, catalog: Catalog, pipeline: AutoCompPipeline,
+    def __init__(self, catalog: Catalog, pipeline,
                  config: ServiceConfig, now_fn: Callable[[], float]) -> None:
         self.catalog = catalog
+        # "pipeline" is any cycle planner: AutoCompPipeline or FleetScheduler
         self.pipeline = pipeline
         self.config = config
         self.trigger = PeriodicTrigger(config.interval_hours, now_fn)
         self.hook: Optional[OptimizeAfterWriteHook] = None
         if config.mode in ("after_write", "both"):
             self.hook = OptimizeAfterWriteHook(catalog)
-        self.reports: List[CycleReport] = []
+        self.reports: List = []
+        # table_ids whose selected candidates were deferred by act last
+        # cycle (closed off-peak window): requeued next cycle instead of
+        # silently vanishing
+        self._requeue: Set[str] = set()
 
-    def tick(self) -> Optional[CycleReport]:
+    def tick(self):
         """Call regularly (e.g. once per simulated hour). Runs a cycle when
-        due; returns its report."""
+        due; returns its report (CycleReport / FleetCycleReport)."""
         if not self.trigger.should_fire():
             return None
         self.trigger.mark_fired()
         tables = None
         if self.hook is not None and self.config.mode == "after_write":
-            dirty = self.hook.drain_dirty()
+            due = self.hook.drain_dirty() | self._requeue
             tables = [t for t in self.catalog.tables()
-                      if t.table_id in dirty]
+                      if t.table_id in due]
         rep = self.pipeline.run_cycle(self.catalog, tables=tables)
+        self._requeue = {k[0] for k in getattr(rep, "deferred_keys", ())}
         self.reports.append(rep)
         return rep
 
@@ -61,4 +75,6 @@ class AutoCompService:
             "gbhr": sum(r.gbhr for r in self.reports),
             "conflicts": sum(r.act.conflicts for r in self.reports if r.act),
             "failures": sum(r.act.failures for r in self.reports if r.act),
+            "deferred": sum(len(getattr(r, "deferred_keys", ()))
+                            for r in self.reports),
         }

@@ -24,7 +24,7 @@ if str(_SRC) not in sys.path:
 
 # modules that import `hypothesis` at module scope
 _HYPOTHESIS_MODULES = ["test_core_properties.py", "test_dist.py",
-                       "test_xlstm_vjp.py"]
+                       "test_fleet.py", "test_xlstm_vjp.py"]
 
 collect_ignore: list = []
 

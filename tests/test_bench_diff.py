@@ -199,6 +199,68 @@ class TestDisappearedKeys:
         assert bench_diff.main(["--current", cur, "--baseline", base]) == 1
 
 
+def _fleet_rec(shape="fleet_48t_3c", **roofline):
+    r = {"arch": "fleet-sim", "shape": shape, "mesh": None,
+         "preset": "fleet", "grad_transport": None, "act_transport": None,
+         "microbatches": None, "remat_block": None, "capacity_factor": None,
+         "status": "ok",
+         "roofline": {"fleet_p99_query_s": 2.0,
+                      "fleet_file_count_final": 5000.0,
+                      "fleet_gbhr_total": 3.0,
+                      "fleet_starvation_max_cycles": 2.0}}
+    r["roofline"].update(roofline)
+    return r
+
+
+class TestFleetKeys:
+    """The fleet-sim artifact keys are gated lower-is-better: the storm is
+    seeded, so metric growth is a scheduler behavior change, not noise."""
+
+    def test_fleet_keys_are_gated_lower(self):
+        for m in ("fleet_p99_query_s", "fleet_file_count_final",
+                  "fleet_gbhr_total", "fleet_starvation_max_cycles"):
+            assert bench_diff.METRICS[m] == "lower"
+
+    def test_p99_and_file_count_growth_fails(self):
+        base = [_fleet_rec()]
+        cur = [_fleet_rec(fleet_p99_query_s=2.6,          # +30%
+                          fleet_file_count_final=6500.0)]  # +30%
+        res = bench_diff.diff_trajectories(cur, base)
+        assert sorted(r["metric"] for r in res["regressions"]) \
+            == ["fleet_file_count_final", "fleet_p99_query_s"]
+
+    def test_starvation_bound_growth_fails(self):
+        """An aging-invariant break (max skip cycles up 2 -> 3) trips the
+        gate even though every latency number held."""
+        res = bench_diff.diff_trajectories(
+            [_fleet_rec(fleet_starvation_max_cycles=3.0)], [_fleet_rec()])
+        assert [r["metric"] for r in res["regressions"]] \
+            == ["fleet_starvation_max_cycles"]
+
+    def test_improvement_passes(self):
+        res = bench_diff.diff_trajectories(
+            [_fleet_rec(fleet_p99_query_s=1.0, fleet_file_count_final=3000.0,
+                        fleet_gbhr_total=2.0)],
+            [_fleet_rec()])
+        assert res["regressions"] == [] and res["missing_metrics"] == []
+
+    def test_smoke_and_sweep_cells_never_collide(self):
+        """The shape encodes the fleet size: the PR-smoke 48-table cell
+        must not diff against the nightly 2000-table storm."""
+        base = [_fleet_rec(shape="fleet_2000t_4c",
+                           fleet_file_count_final=400_000.0)]
+        cur = [_fleet_rec(shape="fleet_48t_3c")]
+        res = bench_diff.diff_trajectories(cur, base)
+        assert res["compared"] == 0 and res["regressions"] == []
+
+    def test_lost_fleet_key_fails(self, tmp_path):
+        base = _traj(tmp_path / "base.json", [_fleet_rec()])
+        rec = _fleet_rec()
+        del rec["roofline"]["fleet_starvation_max_cycles"]
+        cur = _traj(tmp_path / "cur.json", [rec])
+        assert bench_diff.main(["--current", cur, "--baseline", base]) == 1
+
+
 class TestMainGate:
     def test_missing_baseline_tolerated(self, tmp_path):
         cur = _traj(tmp_path / "cur.json", [_rec()])

@@ -126,6 +126,28 @@ class TestRanking:
         sel = select_budget(ranked, budget)
         assert sum(c.traits["compute_cost"] for c in sel) <= budget + 1e-9
 
+    @given(st.lists(st.tuples(st.floats(0, 100), st.floats(0.0, 10),
+                              st.booleans()),
+                    min_size=1, max_size=30),
+           st.floats(min_value=0.5, max_value=20.0))
+    @settings(max_examples=30, deadline=None)
+    def test_budget_skips_unpriced_conservatively(self, vals, budget):
+        """A candidate with NO compute_cost trait must never be admitted
+        (missing cost is unknown, not free) and must be counted; an
+        explicit cost of 0.0 is priced and admissible."""
+        cands = self._cands([(b, c) for b, c, _ in vals])
+        for (b, c, unpriced), cand in zip(vals, cands):
+            if unpriced:
+                del cand.traits["compute_cost"]
+        unpriced_out = []
+        sel = select_budget(cands, budget, unpriced=unpriced_out)
+        assert all("compute_cost" in c.traits for c in sel)
+        assert len(unpriced_out) == sum(1 for _, _, u in vals if u)
+        assert sum(c.traits["compute_cost"] for c in sel) <= budget + 1e-9
+        # explicitly-free candidates are all admitted
+        free = [c for c in cands if c.traits.get("compute_cost") == 0.0]
+        assert all(c in sel for c in free)
+
     def test_higher_benefit_same_cost_ranks_first(self):
         """Paper §4.2: 200-file reduction beats 100 at equal cost."""
         cands = self._cands([(100, 5), (200, 5)])
@@ -210,3 +232,20 @@ class TestTuneDesign:
         res = tune_design(lambda p: 7.0, {"only": ("v",)})
         assert res.best_point == {"only": "v"}
         assert res.best_objective == 7.0 and res.evaluations == 1
+
+    def test_warm_start_from_incumbent(self):
+        """``start`` seeds the walk at the incumbent point (fleet profile
+        re-tuning); values outside the axes are ignored, not an error."""
+        from repro.core.autotune import tune_design
+
+        def ev(p):
+            return abs(p["a"] - 3) + abs(p["b"] - 30)
+
+        axes = {"a": (0, 1, 2, 3, 4), "b": (10, 20, 30)}
+        res = tune_design(ev, axes, start={"a": 3, "b": 30, "junk": 9})
+        assert res.best_point == {"a": 3, "b": 30}
+        assert res.history[0][0] == {"a": 3, "b": 30}   # evaluated first
+        # a start value not in the axis falls back to the axis default
+        res2 = tune_design(ev, axes, start={"a": 99})
+        assert res2.history[0][0]["a"] == 0
+        assert res2.best_point == {"a": 3, "b": 30}

@@ -1,0 +1,355 @@
+"""Fleet-scale scheduler invariants (core/fleet.py).
+
+Property tests (hypothesis) on the cross-table decide: the shared budget is
+conserved, no fragmented table starves past the aging bound, and the pooled
+ranking is deterministic under permuted input order (NFR2). Plus the
+satellite behaviors this PR wires through the stack: memoized observe
+staleness, deferred-candidate requeue, workload classification, and a
+~2k-table cycle with sub-linear re-observation.
+"""
+
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.act import Scheduler
+from repro.core.fleet import (ClassProfile, FleetScheduler, classify_table,
+                              build_class_pipeline)
+from repro.core.model import Candidate, Scope
+from repro.core.observe import StatsCollector
+from repro.core.service import AutoCompService, ServiceConfig
+from repro.lst import Catalog, InMemoryStore
+from repro.lst.files import DataFile
+from repro.lst.workload import (ActivityTracker, FleetSpec, QueryEvent,
+                                SimClock, WorkloadGenerator, WorkloadSpec)
+
+MB = 1 << 20
+_FILE_IDS = itertools.count(1)
+
+
+def mk_world():
+    clock = SimClock()
+    store = InMemoryStore()
+    return clock, store, Catalog(store, now_fn=clock.now)
+
+
+def append_small(table, n, size_mb=1.0, partition=None):
+    files = []
+    for _ in range(n):
+        fid = next(_FILE_IDS)
+        path = f"{table.table_id}/data/part-{fid:08d}.parquet"
+        table.store.put(path, b"x")
+        files.append(DataFile(path, int(size_mb * MB), 100, partition))
+    table.append(files)
+    return files
+
+
+def mk_fleet_world(n_tables, n_files=10, budget=1.0, **fleet_kw):
+    clock, store, catalog = mk_world()
+    catalog.create_namespace("db", total_quota=10_000_000)
+    tables = []
+    for i in range(n_tables):
+        t = catalog.create_table("db", f"t{i:03d}", None)
+        t.now_fn = clock.now
+        append_small(t, n_files)
+        tables.append(t)
+    fleet = FleetScheduler(catalog, budget_gbhr=budget, **fleet_kw)
+    return clock, catalog, tables, fleet
+
+
+def mk_pool_candidate(i, benefit, cost, unpriced=False):
+    """A pool-level candidate with traits pre-set (decide-phase input)."""
+    store = InMemoryStore()
+    catalog = Catalog(store)
+    catalog.create_namespace("p", total_quota=10_000)
+    t = catalog.create_table("p", f"t{i:03d}", None)
+    append_small(t, 2)
+    c = Candidate(t, Scope.TABLE)
+    StatsCollector(512 * MB).observe(c)
+    c.traits = {"file_count_reduction": float(benefit)}
+    if not unpriced:
+        c.traits["compute_cost"] = float(cost)
+    c.fleet_class = "steady"
+    return c
+
+
+def pool_fleet(**kw):
+    _, _, catalog = mk_world()
+    return FleetScheduler(catalog, **kw)
+
+
+pool_strategy = st.lists(
+    st.tuples(st.floats(0, 1e4), st.floats(0.01, 10.0),
+              st.booleans()),
+    min_size=1, max_size=25)
+
+
+class TestFleetDecide:
+    @given(pool_strategy, st.floats(min_value=0.0, max_value=30.0))
+    @settings(max_examples=25, deadline=None)
+    def test_budget_conservation(self, vals, budget):
+        """Invariant: Σ selected compute_cost <= shared budget; unpriced
+        candidates are never admitted."""
+        fleet = pool_fleet(budget_gbhr=budget)
+        pool = [mk_pool_candidate(i, b, c, unpriced=u)
+                for i, (b, c, u) in enumerate(vals)]
+        _, selected, unpriced = fleet.decide(pool)
+        assert sum(c.traits["compute_cost"]
+                   for c in selected) <= budget + 1e-9
+        assert all("compute_cost" in c.traits for c in selected)
+        assert len(unpriced) == sum(1 for _, _, u in vals if u)
+
+    @given(pool_strategy, st.randoms())
+    @settings(max_examples=20, deadline=None)
+    def test_ranking_permutation_invariant(self, vals, rnd):
+        """NFR2: permuting candidate enumeration order never changes the
+        fleet's ranking or selection."""
+        fleet = pool_fleet(budget_gbhr=5.0)
+        a_pool = [mk_pool_candidate(i, b, c, unpriced=u)
+                  for i, (b, c, u) in enumerate(vals)]
+        b_pool = [mk_pool_candidate(i, b, c, unpriced=u)
+                  for i, (b, c, u) in enumerate(vals)]
+        rnd.shuffle(b_pool)
+        ra, sa, _ = fleet.decide(a_pool)
+        rb, sb, _ = fleet.decide(b_pool)
+        assert [c.key for c in ra] == [c.key for c in rb]
+        assert [c.key for c in sa] == [c.key for c in sb]
+
+    def test_aging_promotes_starved_table(self):
+        """A table at the starvation bound jumps ahead of higher-scored
+        competitors (hard promotion, not just a score boost)."""
+        fleet = pool_fleet(budget_gbhr=100.0, starvation_cycles=3)
+        pool = [mk_pool_candidate(0, benefit=1.0, cost=1.0),
+                mk_pool_candidate(1, benefit=100.0, cost=1.0)]
+        starved = pool[0].table.table_id
+        fleet.skip_cycles[starved] = 3
+        ranked, _, _ = fleet.decide(pool)
+        assert ranked[0].table.table_id == starved
+
+    def test_query_frequency_weights_benefit(self):
+        """Equal layouts: the hotter table (higher query_freq) wins."""
+        fleet = pool_fleet(budget_gbhr=100.0)
+        cold = mk_pool_candidate(0, benefit=10.0, cost=1.0)
+        hot = mk_pool_candidate(1, benefit=10.0, cost=1.0)
+        tail = mk_pool_candidate(2, benefit=1.0, cost=1.0)
+        cold.stats.custom["query_freq"] = 0.1
+        hot.stats.custom["query_freq"] = 50.0
+        ranked, _, _ = fleet.decide([cold, hot, tail])
+        assert ranked[0] is hot
+
+
+class TestStarvationBound:
+    def test_no_table_waits_past_bound(self):
+        """Two permanently-hotter tables are refragmented every cycle; the
+        budget (max_k) serves only two of four. The two colder tables age
+        to the bound, get promoted oldest-first, and are served — no
+        fragmented table ever waits longer than starvation_cycles."""
+        clock, catalog, tables, fleet = mk_fleet_world(
+            4, n_files=10, budget=100.0, max_k=2, starvation_cycles=2)
+        for cyc in range(6):
+            # keep t000/t001 strictly more fragmented (higher benefit)
+            for t in tables[:2]:
+                append_small(t, 14)
+            rep = fleet.run_cycle()
+            clock.advance(1.0)
+            assert rep.spent_gbhr <= fleet.budget_gbhr + 1e-9
+            assert rep.max_skip_cycles <= fleet.starvation_cycles
+        assert fleet.max_skip_ever <= fleet.starvation_cycles
+        # the cold pair actually reached the bound and got served via
+        # promotion (not coincidentally selected on score)
+        assert fleet.max_skip_ever == fleet.starvation_cycles
+        assert sum(r.starved_served for r in fleet.reports) >= 2
+
+    def test_deferred_counts_as_unserved(self):
+        """A closed off-peak window defers the selection; deferred tables
+        keep aging (window closure must not mask starvation)."""
+        def factory(profile, activity=None, stats=None):
+            return build_class_pipeline(
+                profile, activity, stats=stats,
+                scheduler=Scheduler(profile.target_file_mb * MB,
+                                    offpeak_window=lambda: False))
+        clock, catalog, tables, fleet = mk_fleet_world(
+            2, budget=100.0, starvation_cycles=3,
+            pipeline_factory=factory)
+        rep = fleet.run_cycle()
+        assert rep.n_selected == 2
+        assert len(rep.deferred_keys) == 2
+        assert rep.files_removed == 0
+        assert all(fleet.skip_cycles[t.table_id] == 1 for t in tables)
+
+
+class TestMemoizedObserve:
+    def test_hit_on_same_snapshot_miss_after_append(self):
+        clock, store, catalog = mk_world()
+        catalog.create_namespace("db", total_quota=10_000)
+        t = catalog.create_table("db", "t0", None)
+        append_small(t, 6)
+        coll = StatsCollector(512 * MB)
+        c = Candidate(t, Scope.TABLE)
+        s1 = coll.observe(c)
+        s2 = coll.observe(Candidate(t, Scope.TABLE))
+        assert (coll.memo_hits, coll.memo_misses) == (1, 1)
+        assert s2.file_count == s1.file_count == 6
+        # staleness: a commit moves the snapshot -> fresh scan, not the memo
+        append_small(t, 3)
+        s3 = coll.observe(Candidate(t, Scope.TABLE))
+        assert coll.memo_misses == 2
+        assert s3.file_count == 9
+
+    def test_activity_stats_never_cached(self):
+        """Query frequency moves without a new snapshot; a memo hit must
+        still return fresh activity numbers."""
+        clock, store, catalog = mk_world()
+        catalog.create_namespace("db", total_quota=10_000)
+        t = catalog.create_table("db", "t0", None)
+        append_small(t, 4)
+        tracker = ActivityTracker(now_fn=clock.now)
+        coll = StatsCollector(512 * MB, activity=tracker)
+        s1 = coll.observe(Candidate(t, Scope.TABLE))
+        assert s1.custom["query_freq"] == 0.0
+        tracker.record([QueryEvent(0.0, "read", t.table_id)] * 8)
+        s2 = coll.observe(Candidate(t, Scope.TABLE))
+        assert coll.memo_hits == 1
+        assert s2.custom["query_freq"] == pytest.approx(8.0)
+
+
+class TestClassification:
+    def test_classify_from_activity(self):
+        clock = SimClock(start=4.0)
+        tracker = ActivityTracker(now_fn=clock.now)
+        evs = []
+        for h in range(4):
+            # storm: 6 writes/h x 40 files; steady: 1 write/h x 4 files
+            evs += [QueryEvent(float(h), "write", "db/storm",
+                               files_written=40)] * 6
+            evs += [QueryEvent(float(h), "write", "db/steady",
+                               files_written=4),
+                    QueryEvent(float(h), "read", "db/steady")]
+        # bursty: a trickle across the window, then one concentrated burst
+        evs += [QueryEvent(0.0, "write", "db/bursty", files_written=2),
+                QueryEvent(1.0, "write", "db/bursty", files_written=2)]
+        evs += [QueryEvent(3.5, "write", "db/bursty", files_written=6)] * 8
+        evs += [QueryEvent(3.5, "read", "db/bursty")] * 4
+        # cold: one tiny write long ago
+        evs += [QueryEvent(0.5, "write", "db/cold", files_written=1)]
+        tracker.record(evs)
+
+        def cls(tid):
+            return classify_table(tracker.read_rate(tid),
+                                  tracker.write_file_rate(tid),
+                                  tracker.burstiness(tid))
+        assert cls("db/storm") == "append-storm"
+        assert cls("db/bursty") == "bursty"
+        assert cls("db/cold") == "cold"
+        assert cls("db/steady") == "steady"
+
+    def test_fleet_groups_by_class_and_applies_profiles(self):
+        """cold profile (min_small_files=32) filters a mildly-fragmented
+        cold table that the steady profile (8) would have proposed."""
+        clock, store, catalog = mk_world()
+        catalog.create_namespace("db", total_quota=100_000)
+        hot = catalog.create_table("db", "hot", None)
+        cold = catalog.create_table("db", "cold", None)
+        for t in (hot, cold):
+            t.now_fn = clock.now
+            append_small(t, 12)
+        clock.advance(4.0)
+        tracker = ActivityTracker(now_fn=clock.now)
+        tracker.record([QueryEvent(float(h), "read", hot.table_id)
+                        for h in range(4)] * 2
+                       + [QueryEvent(float(h), "write", hot.table_id,
+                                     files_written=4) for h in range(4)])
+        fleet = FleetScheduler(catalog, budget_gbhr=100.0, activity=tracker)
+        rep = fleet.run_cycle()
+        assert rep.class_counts == {"cold": 1, "steady": 1}
+        sel_tables = {k[0] for k in rep.selected_keys}
+        assert hot.table_id in sel_tables
+        assert cold.table_id not in sel_tables     # filtered by its profile
+
+
+class TestTuneProfile:
+    def test_hillclimb_installs_winner(self):
+        fleet = pool_fleet(budget_gbhr=10.0)
+
+        def evaluate(profile):
+            # favor fine-grained eager compaction, deterministically
+            return (profile.min_small_files
+                    + (0.0 if profile.scope == "hybrid" else 5.0)
+                    + profile.target_file_mb / 512.0)
+
+        best, res = fleet.tune_profile("steady", evaluate)
+        assert best.min_small_files == 2
+        assert best.scope == "hybrid"
+        assert best.target_file_mb == 128
+        assert fleet.profiles["steady"] == best
+        assert fleet.pipelines["steady"].hybrid
+        # warm start came from the incumbent profile
+        assert res.history[0][0]["min_small_files"] == 8
+
+    def test_set_profile_shares_collector_per_target(self):
+        fleet = pool_fleet(budget_gbhr=10.0)
+        same = fleet.pipelines["steady"].stats
+        fleet.set_profile(ClassProfile("steady", min_small_files=2))
+        assert fleet.pipelines["steady"].stats is same
+        assert fleet.pipelines["cold"].stats is same   # same 512MB target
+
+
+class TestServiceRequeue:
+    def test_deferred_tables_reenter_next_cycle(self):
+        """after_write mode: a deferred selection is requeued even though
+        the table is no longer dirty."""
+        clock, store, catalog = mk_world()
+        catalog.create_namespace("db", total_quota=100_000)
+        t = catalog.create_table("db", "t0", None)
+        t.now_fn = clock.now
+        window = {"open": False}
+        profile = ClassProfile("steady", scope="table", min_small_files=4)
+        pipe = build_class_pipeline(
+            profile, scheduler=Scheduler(512 * MB,
+                                         offpeak_window=lambda: window["open"]))
+        svc = AutoCompService(catalog, pipe,
+                              ServiceConfig(interval_hours=1.0,
+                                            mode="after_write"),
+                              now_fn=clock.now)
+        append_small(t, 10)                 # marks dirty via notify_write?
+        catalog.notify_write(t)
+        clock.advance(1.0)
+        rep1 = svc.tick()
+        assert len(rep1.deferred_keys) == 1
+        assert rep1.files_removed == 0
+        # no new writes; the requeue alone brings the table back
+        window["open"] = True
+        clock.advance(1.0)
+        rep2 = svc.tick()
+        assert rep2.n_selected == 1
+        assert rep2.files_removed > 0
+        assert svc.totals()["deferred"] == 1
+
+
+class TestFleetScale:
+    def test_2k_table_cycle_sublinear_reobserve(self):
+        """Acceptance: a ~2k-table fleet runs full cycles; the second
+        cycle re-scans only the tables whose snapshot moved (memo), and
+        every cycle's selection respects the shared budget. The budget is
+        deliberately tight so cycle 1 compacts only a sliver of the fleet
+        and cycle 2's hit rate is attributable to the memo, not to an
+        empty pool."""
+        clock = SimClock()
+        store = InMemoryStore()
+        catalog = Catalog(store, now_fn=clock.now)
+        gen = WorkloadGenerator(catalog, WorkloadSpec(seed=0), clock)
+        gen.setup_fleet(FleetSpec(n_tables=2000, seed=0))
+        fleet = FleetScheduler(catalog, budget_gbhr=0.05)
+        rep1 = fleet.run_cycle()
+        assert rep1.n_tables == 2000
+        assert 0 < rep1.spent_gbhr <= 0.05 + 1e-9
+        misses_c1 = sum(c.memo_misses for c in fleet._collectors.values())
+        rep2 = fleet.run_cycle()
+        assert rep2.spent_gbhr <= 0.05 + 1e-9
+        misses_c2 = sum(c.memo_misses for c in fleet._collectors.values())
+        hits_c2 = sum(c.memo_hits for c in fleet._collectors.values())
+        # nothing ingested between cycles: only tables compacted in cycle 1
+        # moved, so cycle 2 is nearly all memo hits
+        assert misses_c2 - misses_c1 < 0.1 * rep2.n_candidates
+        assert hits_c2 > 0.9 * rep2.n_candidates
