@@ -1,12 +1,34 @@
 """Kernel microbenchmarks (interpret-mode correctness + host timing) and the
 RewriteBytesPerHour calibration for the GBHr cost trait (§4.2): measured
 throughput of the compact_pack merge path on this host feeds the cost model
-the simulations use."""
+the simulations use.
+
+``--json`` additionally runs the tunable-kernel sweep harness
+(repro.kernels.tune) over every registered op and writes a
+BENCH_roofline-shaped artifact ({"records": [...]}) that
+``scripts/bench_diff.py`` gates:
+
+  * one record per op with ``kernel_<op>_default_s`` vs
+    ``kernel_<op>_tuned_s`` (the tuned point is persisted to
+    experiments/tuned/ and served from cache on re-runs), and
+  * a compact_pack filter-fraction sweep: the fused filter+pack kernel vs
+    the filter-then-pack reference at several delete fractions, with
+    ``kernel_compact_filter_s``, the analytic HBM traffic of each path
+    (``kernel_compact_filter_hbm_bytes`` — the fused gather reads only
+    touched chunks and writes only kept rows; the reference reads and
+    writes everything twice), and a bit-match check (record status flips
+    to "mismatch" if fused != reference).
+
+CI: bench-smoke runs ``--quick --json BENCH_kernels.json`` per PR;
+nightly bench-sweep runs the full shapes with ``--sweep`` (force
+re-tune) into its own BENCH_kernels_sweep lineage.
+"""
 
 from __future__ import annotations
 
+import json
 import time
-from typing import List
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -86,10 +108,143 @@ def main(quick: bool = False) -> List[str]:
     return rows
 
 
-if __name__ == "__main__":
+def _record(shape: str, preset: str, roofline: Dict[str, float],
+            status: str = "ok", **extra: Any) -> Dict[str, Any]:
+    """One BENCH_roofline-shaped record (same cell-key fields the other
+    artifacts use, so bench_diff matches cells across runs)."""
+    rec = {
+        "arch": "kernel",
+        "shape": shape,
+        "mesh": None, "preset": preset,
+        "grad_transport": None, "act_transport": None,
+        "microbatches": None, "remat_block": None, "capacity_factor": None,
+        "status": status,
+        "roofline": {k: float(v) for k, v in roofline.items()},
+    }
+    rec.update(extra)
+    return rec
+
+
+def tuned_records(quick: bool, iters: int = 3,
+                  force: bool = False) -> List[Dict[str, Any]]:
+    """Sweep every registered op (cache-first unless ``force``), then time
+    the clamped default point against the tuned winner on the same
+    operands — the gated ``kernel_<op>_tuned_s`` trajectory."""
+    from repro.kernels import api, tune
+
+    preset = "kernel-quick" if quick else "kernel-full"
+    records = []
+    for name, op in api.ops().items():
+        outcome = tune.tune_op(name, quick=quick, iters=iters, force=force)
+        args, kwargs = op.example(quick)
+        default = op.clamp(api.default_point(op), *args, **kwargs)
+        default_us = tune.time_point(op, default, args, kwargs, iters=iters)
+        tuned_us = tune.time_point(op, outcome.point, args, kwargs,
+                                   iters=iters)
+        records.append(_record(
+            f"{name}:{outcome.shape_key}", preset,
+            {f"kernel_{name}_default_s": default_us / 1e6,
+             f"kernel_{name}_tuned_s": tuned_us / 1e6},
+            point=dict(outcome.point), default_point=dict(default),
+            cache_hit=outcome.cache_hit,
+            sweep_evaluations=outcome.evaluations))
+    return records
+
+
+FILTER_FRACTIONS = (0.1, 0.5, 0.9)
+
+
+def filter_records(quick: bool, iters: int = 3) -> List[Dict[str, Any]]:
+    """compact_pack filter-fraction sweep: fused filter+pack vs the
+    two-pass filter-then-pack reference at several delete fractions.
+
+    The HBM model comes from the plan, not the stopwatch: the fused gather
+    reads only touched source chunks (+1 flush re-read at most) and writes
+    only ceil(kept/8) chunks; the reference reads every planned chunk,
+    writes the full packed stream, re-reads it, and writes the kept rows.
+    Bit-equality of the two outputs is checked on every cell — a mismatch
+    flips the record status, which drops it from the gate (bench_diff only
+    matches "ok" cells) and fails the lost-metric check loudly.
+    """
+    from repro.kernels.compact_pack import compact_chunks, plan_compaction
+    from repro.kernels.compact_pack.ops import plan_filter
+    from repro.kernels.compact_pack.compact_pack import (
+        CHUNK_ROWS, CHUNK_TOKENS)
+
+    preset = "kernel-quick" if quick else "kernel-full"
+    n_chunks = 128 if quick else 1024
+    frag = 16 if quick else 64
+    key = jax.random.PRNGKey(0)
+    src = jax.random.randint(key, (n_chunks * CHUNK_TOKENS,), 0, 1 << 30,
+                             dtype=jnp.int32)
+    cm = plan_compaction([frag] * (n_chunks // frag),
+                         fragment_order=list(reversed(range(n_chunks // frag))))
+    rng = np.random.RandomState(0)
+    itemsize = 4
+    records = []
+    for frac in FILTER_FRACTIONS:
+        keep = rng.rand(n_chunks * CHUNK_ROWS) >= frac   # frac = drop rate
+        fused = np.asarray(compact_chunks(src, cm, keep_mask=keep))
+        ref = np.asarray(compact_chunks(src, cm, use_ref=True,
+                                        keep_mask=keep))
+        bit_match = bool(np.array_equal(fused, ref))
+        us_fused = _time_us(
+            lambda s: compact_chunks(s, cm, keep_mask=keep), src,
+            iters=iters)
+        us_ref = _time_us(
+            lambda s: compact_chunks(s, cm, use_ref=True, keep_mask=keep),
+            src, iters=iters)
+        chunk_sel, _, _, _, n_out = plan_filter(cm, keep)
+        fused_bytes = (len(chunk_sel) + n_out) * CHUNK_TOKENS * itemsize
+        ref_bytes = (3 * len(cm) + n_out) * CHUNK_TOKENS * itemsize
+        records.append(_record(
+            f"compact_filter:n{n_chunks}_drop{int(frac * 100)}", preset,
+            {"kernel_compact_filter_s": us_fused / 1e6,
+             "kernel_compact_filter_ref_s": us_ref / 1e6,
+             "kernel_compact_filter_hbm_bytes": fused_bytes,
+             "kernel_compact_filter_ref_hbm_bytes": ref_bytes},
+            status="ok" if bit_match else "mismatch",
+            bit_match=bit_match,
+            touched_chunks=int(len(chunk_sel)), out_chunks=int(n_out)))
+    return records
+
+
+def cli(argv: Optional[List[str]] = None) -> int:
     import argparse
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke mode: tiny shapes, seconds not minutes")
-    for r in main(quick=ap.parse_args().quick):
+    ap.add_argument("--json", default=None,
+                    help="run the tunable-kernel sweep and write a "
+                         "BENCH_roofline-shaped artifact here")
+    ap.add_argument("--sweep", action="store_true",
+                    help="force a fresh block sweep even on a tuned-cache "
+                         "hit (the nightly refresh path)")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    for r in main(quick=args.quick):
         print(r)
+    if args.json:
+        records = tuned_records(args.quick, iters=args.iters,
+                                force=args.sweep)
+        records += filter_records(args.quick, iters=args.iters)
+        from repro.kernels import tuned
+        payload = {"cells": len(records), "records": records,
+                   "config": {"quick": args.quick, "sweep": args.sweep,
+                              "iters": args.iters,
+                              "device_kind": tuned.device_kind(),
+                              "tuned_cache": str(tuned.cache_path())}}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.json} ({len(records)} records)")
+        bad = [r["shape"] for r in records if r["status"] != "ok"]
+        if bad:
+            print(f"BIT-MATCH FAILURE in cells: {bad}")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(cli())

@@ -74,6 +74,19 @@ for _m in ("fleet_p99_query_s", "fleet_file_count_final",
            "fleet_gbhr_total", "fleet_starvation_max_cycles"):
     METRICS[_m] = "lower"
 
+# Tunable-kernel cells (arch "kernel", benchmarks/bench_kernels.py --json).
+# kernel_<op>_tuned_s is the trajectory the sweep harness must keep
+# monotone: serving always reads the tuned point from the persisted cache,
+# so a regression here means either the sweep picked a worse point or the
+# kernel itself got slower. The filter cells gate the fused filter+pack
+# hot path: its step time AND its analytic HBM traffic (plan-derived, so
+# deterministic — a plan change that re-reads dropped rows fails even if
+# the stopwatch is noisy).
+for _op in ("compact_pack", "flash_attn", "decode_attn", "rmsnorm"):
+    METRICS[f"kernel_{_op}_tuned_s"] = "lower"
+METRICS["kernel_compact_filter_s"] = "lower"
+METRICS["kernel_compact_filter_hbm_bytes"] = "lower"
+
 DEFAULT_THRESHOLD = 0.15
 
 

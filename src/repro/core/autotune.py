@@ -13,6 +13,7 @@ coordinate-descent hillclimbing.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
@@ -73,7 +74,8 @@ def tune_design(evaluate: Callable[[Dict[str, object]], float],
                 axes: Dict[str, Sequence],
                 minimize: bool = True,
                 max_rounds: int = 8,
-                start: Optional[Dict[str, object]] = None) -> DesignResult:
+                start: Optional[Dict[str, object]] = None,
+                exhaustive: bool = False) -> DesignResult:
     """Coordinate-descent hillclimb over a *discrete* design space.
 
     ``axes`` maps each knob to its ordered candidate values (e.g.
@@ -87,6 +89,11 @@ def tune_design(evaluate: Callable[[Dict[str, object]], float],
     Deterministic (axis and value order fix the walk) and memoized, so a
     point is never evaluated twice — with N axes of k values each, at most
     1 + rounds * N * (k - 1) evaluations instead of k**N.
+
+    ``exhaustive=True`` evaluates the full cartesian product instead (the
+    kernel block sweeps use this: their spaces are a handful of block-size
+    candidates, small enough that the guaranteed optimum is worth k**N
+    evaluations). Same memoization, history, and result shape.
     """
     sign = 1.0 if minimize else -1.0
     history: List[Tuple[Dict[str, object], float]] = []
@@ -106,6 +113,16 @@ def tune_design(evaluate: Callable[[Dict[str, object]], float],
             if a in start and start[a] in vals:
                 best[a] = start[a]
     best_s = ev(best)
+    if exhaustive:
+        names = list(axes)
+        for combo in itertools.product(*axes.values()):
+            point = dict(zip(names, combo))
+            s = ev(point)
+            if s < best_s:
+                best, best_s = point, s
+        return DesignResult(history=history, best_point=best,
+                            best_objective=sign * best_s,
+                            evaluations=len(history), rounds=1)
     rounds = 0
     for _ in range(max_rounds):
         rounds += 1

@@ -1,4 +1,4 @@
-"""Token-run compaction kernel — the AutoComp rewrite inner loop on TPU.
+"""Token-run compaction kernels — the AutoComp rewrite inner loop on TPU.
 
 Hardware adaptation (DESIGN.md §2): the Spark executor's file-rewrite loop
 (read many small fragments, emit few target-size files) becomes a
@@ -7,22 +7,47 @@ scalar-prefetched DMA gather. Token shards are written 128x8-aligned
 fragments into dense output blocks is a *permutation of aligned chunks*:
 no compute, pure data movement — exactly what the TPU DMA engine does well.
 
-The chunk index map rides in scalar-prefetch SMEM (PrefetchScalarGridSpec);
-the BlockSpec index_map dereferences it, so the Pallas pipeline issues the
-HBM->VMEM->HBM copies with double buffering. The kernel body is a single
-VMEM tile copy.
+Two kernels:
+
+``compact_chunks_kernel`` — the plain gather. The chunk index map rides in
+scalar-prefetch SMEM (PrefetchScalarGridSpec); the BlockSpec index_map
+dereferences it, so the Pallas pipeline issues the HBM->VMEM->HBM copies
+with double buffering. The kernel body is a single VMEM tile copy. The
+DMA granularity is tunable: when the plan is runs of consecutive chunks
+(fragments usually are), the wrapper coarsens ``block_chunks`` chunks into
+one block — fewer, larger copies, the data-movement knob the LSM
+compaction design-space work (arXiv:2202.04522) identifies as dominant.
+
+``compact_filter_kernel`` — the fused filter+pack variant (rewrite-deletes
+as compaction: a rewrite that drops rows IS a compaction with a filter).
+Filtering happens at 128-token row granularity in ONE pass: the grid walks
+the *touched* source chunks in plan order (fully-dropped chunks are never
+DMA'd), each kept row is scattered into a 16-row staging window at a
+host-precomputed destination slot (scalar-prefetched, derived from the
+per-chunk keep counts' prefix sums), and a carry tile in VMEM scratch
+holds the <8 rows that straddle an output-chunk boundary. Dropped rows
+never round-trip through VMEM twice — the unfused path writes every row
+then re-reads all of them to filter.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams as _CompilerParams
+
 CHUNK_ROWS = 8
 CHUNK_COLS = 128
 CHUNK_TOKENS = CHUNK_ROWS * CHUNK_COLS  # 1024
+
+# destination-slot sentinel for dropped rows: never matches the 16-slot
+# staging window iota, so the scatter contributes exact zeros
+DROP_SLOT = 127
 
 
 def _copy_kernel(idx_ref, src_ref, out_ref):
@@ -32,27 +57,107 @@ def _copy_kernel(idx_ref, src_ref, out_ref):
 
 def compact_chunks_kernel(src: jnp.ndarray, chunk_map: jnp.ndarray,
                           interpret: bool = False) -> jnp.ndarray:
-    """Gather chunks of ``src`` according to ``chunk_map``.
+    """Gather blocks of ``src`` according to ``chunk_map``.
 
-    src: (n_src_chunks, CHUNK_ROWS, CHUNK_COLS) any dtype
-    chunk_map: (n_out_chunks,) int32 -- source chunk id per output chunk
-    returns (n_out_chunks, CHUNK_ROWS, CHUNK_COLS)
+    src: (n_src_blocks, rows, CHUNK_COLS) any dtype — ``rows`` is
+        CHUNK_ROWS for the plain per-chunk gather, or a multiple of it
+        when the wrapper coarsened the plan (block_chunks > 1)
+    chunk_map: (n_out_blocks,) int32 -- source block id per output block
+    returns (n_out_blocks, rows, CHUNK_COLS)
     """
     n_out = chunk_map.shape[0]
+    rows = src.shape[1]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n_out,),
         in_specs=[
-            pl.BlockSpec((1, CHUNK_ROWS, CHUNK_COLS),
+            pl.BlockSpec((1, rows, CHUNK_COLS),
                          lambda i, idx_ref: (idx_ref[i], 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, CHUNK_ROWS, CHUNK_COLS),
+        out_specs=pl.BlockSpec((1, rows, CHUNK_COLS),
                                lambda i, idx_ref: (i, 0, 0)),
     )
     return pl.pallas_call(
         _copy_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(
-            (n_out, CHUNK_ROWS, CHUNK_COLS), src.dtype),
+            (n_out, rows, CHUNK_COLS), src.dtype),
         interpret=interpret,
     )(chunk_map, src)
+
+
+def _filter_kernel(chunk_sel_ref, dest_ref, completed_ref, out_idx_ref,
+                   src_ref, out_ref, carry_ref):
+    """One touched source chunk per step, sequential grid.
+
+    The staging window W is 16 rows: slots 0..7 are the output chunk
+    currently being assembled, 8..15 spill into the carry. Row j of the
+    loaded tile goes to slot dest[8*i + j] (host-precomputed from the
+    keep-count prefix sums; DROP_SLOT for dropped rows, which therefore
+    contribute exact zeros and never reach the output). When this step
+    completes an output chunk (completed[i]), W[:8] is final for out block
+    out_idx[i] and W[8:] shifts down into the carry; otherwise everything
+    still lives in W[:8] and carries forward. o_ref is written every step
+    — Pallas flushes the block when out_idx advances, so the last write
+    at each index wins, and the final partial chunk flushes at grid end
+    zero-padded (the carry invariant keeps slots >= the fill level zero).
+    """
+    del chunk_sel_ref, out_idx_ref      # consumed by the BlockSpec maps
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    tile = src_ref[0]                                   # (8, 128)
+    window = jnp.concatenate(
+        [carry_ref[...], jnp.zeros_like(carry_ref)], axis=0)   # (16, 128)
+    slot_iota = jax.lax.broadcasted_iota(
+        jnp.int32, (2 * CHUNK_ROWS, 1), 0)
+    for j in range(CHUNK_ROWS):
+        dest = dest_ref[i * CHUNK_ROWS + j]
+        row = tile[j:j + 1, :]                          # (1, 128)
+        window = window + jnp.where(slot_iota == dest,
+                                    jnp.broadcast_to(row, window.shape),
+                                    jnp.zeros_like(window))
+    out_ref[0] = window[:CHUNK_ROWS].astype(out_ref.dtype)
+    carry_ref[...] = jnp.where(completed_ref[i] > 0,
+                               window[CHUNK_ROWS:], window[:CHUNK_ROWS])
+
+
+def compact_filter_kernel(src: jnp.ndarray, chunk_sel: jnp.ndarray,
+                          dest: jnp.ndarray, completed: jnp.ndarray,
+                          out_idx: jnp.ndarray, n_out: int,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Fused filter+pack over touched chunks (see ``_filter_kernel``).
+
+    src: (n_src_chunks, CHUNK_ROWS, CHUNK_COLS)
+    chunk_sel: (n_touched,) int32 -- source chunk per grid step, plan order
+    dest: (n_touched * CHUNK_ROWS,) int32 -- staging slot per source row
+        (0..15, or DROP_SLOT for dropped rows)
+    completed: (n_touched,) int32 -- 1 iff this step completes an output
+        chunk (the step's kept rows cross an 8-row boundary)
+    out_idx: (n_touched,) int32 -- output chunk being assembled at step i
+    returns (n_out, CHUNK_ROWS, CHUNK_COLS), final chunk zero-padded
+    """
+    n_steps = chunk_sel.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(n_steps,),
+        in_specs=[
+            pl.BlockSpec((1, CHUNK_ROWS, CHUNK_COLS),
+                         lambda i, cs, d, cf, oi: (cs[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, CHUNK_ROWS, CHUNK_COLS),
+                               lambda i, cs, d, cf, oi: (oi[i], 0, 0)),
+        scratch_shapes=[pltpu.VMEM((CHUNK_ROWS, CHUNK_COLS), src.dtype)],
+    )
+    return pl.pallas_call(
+        _filter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_out, CHUNK_ROWS, CHUNK_COLS), src.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),   # carry crosses steps
+        interpret=interpret,
+    )(chunk_sel, dest, completed, out_idx, src)

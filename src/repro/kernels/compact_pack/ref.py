@@ -1,10 +1,37 @@
-"""Pure-jnp oracle for the compaction gather."""
+"""Pure-jnp oracles for the compaction gather and the filter+pack path."""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.compact_pack.compact_pack import CHUNK_COLS, CHUNK_ROWS
 
 
 def compact_chunks_ref(src: jnp.ndarray, chunk_map: jnp.ndarray
                        ) -> jnp.ndarray:
     return jnp.take(src, chunk_map, axis=0)
+
+
+def compact_filter_ref(src: jnp.ndarray, chunk_map: jnp.ndarray,
+                       keep_mask: np.ndarray) -> jnp.ndarray:
+    """Filter-then-pack reference: gather EVERY planned chunk, re-read the
+    packed rows, drop the masked ones, zero-pad to chunk alignment. Two
+    full passes over the data — exactly the HBM round-trip the fused
+    kernel removes. Bit-identical output by construction.
+
+    src: (n_src_chunks, CHUNK_ROWS, CHUNK_COLS)
+    keep_mask: (len(chunk_map) * CHUNK_ROWS,) bool over the packed rows
+    returns (ceil(n_kept / CHUNK_ROWS), CHUNK_ROWS, CHUNK_COLS)
+    """
+    keep = np.asarray(keep_mask, dtype=bool).reshape(-1)
+    packed = jnp.take(src, chunk_map, axis=0)            # pass 1: pack all
+    rows = packed.reshape(-1, CHUNK_COLS)                # pass 2: filter
+    kept_idx = np.flatnonzero(keep)
+    kept = jnp.take(rows, jnp.asarray(kept_idx, jnp.int32), axis=0)
+    n_kept = kept_idx.size
+    pad = (-n_kept) % CHUNK_ROWS
+    if pad:
+        kept = jnp.concatenate(
+            [kept, jnp.zeros((pad, CHUNK_COLS), kept.dtype)], axis=0)
+    return kept.reshape(-1, CHUNK_ROWS, CHUNK_COLS)

@@ -1,4 +1,10 @@
-"""Public flash-decode wrapper (auto interpret on non-TPU backends)."""
+"""Public flash-decode wrapper, registered on the tunable-op registry.
+
+``block_k`` resolves tuned > default (512) and is clamped to the cache
+length (divisor-safe), so a point tuned on a long cache can't mis-grid a
+short one. ``block_k`` regroups the online-softmax accumulation, so no
+axis is exact — kernel-vs-ref matches within fp tolerance only.
+"""
 
 from __future__ import annotations
 
@@ -6,17 +12,64 @@ from functools import partial
 
 import jax
 
-from repro.kernels.decode_attn.decode_attn import decode_attention_kernel
+from repro.kernels import api
+from repro.kernels.decode_attn.decode_attn import (
+    DEFAULT_BLOCK_K, decode_attention_kernel)
 from repro.kernels.decode_attn.ref import decode_attention_ref
 
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+BLOCK_CANDIDATES = (128, 256, 512, 1024)
 
 
-@partial(jax.jit, static_argnames=("block_k", "use_ref"))
-def decode_attention(q, k, v, lengths, *, block_k=512, use_ref=False):
-    if use_ref:
-        return decode_attention_ref(q, k, v, lengths)
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def _run_jit(q, k, v, lengths, *, block_k, interpret):
     return decode_attention_kernel(q, k, v, lengths, block_k=block_k,
-                                   interpret=_use_interpret())
+                                   interpret=interpret)
+
+
+def _run(point, q, k, v, lengths):
+    return _run_jit(q, k, v, lengths, block_k=point["block_k"],
+                    interpret=api.use_interpret())
+
+
+def _ref(q, k, v, lengths):
+    return decode_attention_ref(q, k, v, lengths)
+
+
+def _clamp(point, q, k, v, lengths, **kw):
+    return {"block_k": api.fit_block(point["block_k"], k.shape[1])}
+
+
+def _shape_key(q, k, v, lengths, **kw):
+    b, h, d = q.shape
+    return f"b{b}h{h}kv{k.shape[2]}s{k.shape[1]}d{d}:{q.dtype.name}"
+
+
+def _example(quick: bool):
+    import jax.numpy as jnp
+    s = 512 if quick else 2048
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (4, 8, 64), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(key, (4, s, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(key, (4, s, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    lens = jnp.asarray([s, s // 2, s // 4, 100], jnp.int32)
+    return (q, k, v, lens), {}
+
+
+api.register(api.TunableOp(
+    name="decode_attn",
+    axes={"block_k": BLOCK_CANDIDATES},
+    default={"block_k": DEFAULT_BLOCK_K},
+    run=_run,
+    ref=_ref,
+    clamp=_clamp,
+    shape_key=_shape_key,
+    example=_example,
+    exact_axes=frozenset(),
+    tol=5e-2,
+))
+
+
+def decode_attention(q, k, v, lengths, *, block_k=None, use_ref=False):
+    point = None if block_k is None else {"block_k": block_k}
+    return api.call("decode_attn", q, k, v, lengths, point=point,
+                    use_ref=use_ref)

@@ -1,4 +1,17 @@
-"""Public flash-attention wrapper (auto interpret on non-TPU backends)."""
+"""Public flash-attention wrapper, registered on the tunable-op registry.
+
+``block_q``/``block_k`` default to the tuned point for this (shape,
+dtype, device-kind) cell when one is cached, else the deterministic
+default (512/512 — the pre-registry hard-coded blocks). Explicit values
+override; every point is clamped to the sequence extent so a point tuned
+on a long shape degrades to a divisor on a shorter one instead of
+tripping the grid assert.
+
+``block_q`` is an exact axis: retiling the query rows never regroups the
+kv reduction, so outputs are bit-identical across its values. ``block_k``
+splits the online softmax differently and only matches within fp
+tolerance.
+"""
 
 from __future__ import annotations
 
@@ -6,20 +19,72 @@ from functools import partial
 
 import jax
 
-from repro.kernels.flash_attn.flash_attn import flash_attention_kernel
+from repro.kernels import api
+from repro.kernels.flash_attn.flash_attn import (
+    DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q, flash_attention_kernel)
 from repro.kernels.flash_attn.ref import flash_attention_ref
 
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+BLOCK_CANDIDATES = (128, 256, 512, 1024)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
-                                   "use_ref"))
+                                   "interpret"))
+def _run_jit(q, k, v, *, causal, window, block_q, block_k, interpret):
+    return flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)
+
+
+def _run(point, q, k, v, *, causal=True, window=0):
+    return _run_jit(q, k, v, causal=causal, window=window,
+                    block_q=point["block_q"], block_k=point["block_k"],
+                    interpret=api.use_interpret())
+
+
+def _ref(q, k, v, *, causal=True, window=0):
+    return flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def _clamp(point, q, k, v, **kw):
+    s = q.shape[2]
+    return {"block_q": api.fit_block(point["block_q"], s),
+            "block_k": api.fit_block(point["block_k"], s)}
+
+
+def _shape_key(q, k, v, **kw):
+    b, h, s, d = q.shape
+    return f"b{b}h{h}kv{k.shape[1]}s{s}d{d}:{q.dtype.name}"
+
+
+def _example(quick: bool):
+    import jax.numpy as jnp
+    s = 256 if quick else 1024
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, s, 64), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(key, (1, 2, s, 64), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(key, (1, 2, s, 64), jnp.float32).astype(jnp.bfloat16)
+    return (q, k, v), {"causal": True}
+
+
+api.register(api.TunableOp(
+    name="flash_attn",
+    axes={"block_q": BLOCK_CANDIDATES, "block_k": BLOCK_CANDIDATES},
+    default={"block_q": DEFAULT_BLOCK_Q, "block_k": DEFAULT_BLOCK_K},
+    run=_run,
+    ref=_ref,
+    clamp=_clamp,
+    shape_key=_shape_key,
+    example=_example,
+    exact_axes=frozenset({"block_q"}),
+    tol=5e-2,
+))
+
+
 def flash_attention(q, k, v, *, causal=True, window=0,
-                    block_q=512, block_k=512, use_ref=False):
-    if use_ref:
-        return flash_attention_ref(q, k, v, causal=causal, window=window)
-    return flash_attention_kernel(
-        q, k, v, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, interpret=_use_interpret())
+                    block_q=None, block_k=None, use_ref=False):
+    point = None
+    if block_q is not None or block_k is not None:
+        point = {"block_q": block_q or DEFAULT_BLOCK_Q,
+                 "block_k": block_k or DEFAULT_BLOCK_K}
+    return api.call("flash_attn", q, k, v, causal=causal, window=window,
+                    point=point, use_ref=use_ref)

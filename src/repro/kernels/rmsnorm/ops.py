@@ -1,4 +1,12 @@
-"""Public fused-RMSNorm wrapper (auto interpret on non-TPU backends)."""
+"""Public fused-RMSNorm wrapper, registered on the tunable-op registry.
+
+``block_rows`` only tiles independent rows — each row's variance and
+scale never see another row — so it is an exact axis: any value yields
+bit-identical output, and the tuned point is purely a data-movement
+choice. Clamped divisor-safe to the (flattened) row count, which also
+fixes the pre-registry gap where ``min(block_rows, r)`` could still trip
+the ``r % br == 0`` grid assert on a non-dividing shorter shape.
+"""
 
 from __future__ import annotations
 
@@ -6,21 +14,63 @@ from functools import partial
 
 import jax
 
-from repro.kernels.rmsnorm.rmsnorm import rmsnorm_kernel
+from repro.kernels import api
+from repro.kernels.rmsnorm.rmsnorm import DEFAULT_BLOCK_ROWS, rmsnorm_kernel
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+BLOCK_ROWS_CANDIDATES = (64, 128, 256, 512, 1024)
 
 
-@partial(jax.jit, static_argnames=("eps", "block_rows", "use_ref"))
-def rmsnorm(x, scale, *, eps=1e-6, block_rows=256, use_ref=False):
-    if use_ref:
-        return rmsnorm_ref(x, scale, eps)
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def _run_jit(x2, scale, *, eps, block_rows, interpret):
+    return rmsnorm_kernel(x2, scale, eps=eps, block_rows=block_rows,
+                          interpret=interpret)
+
+
+def _run(point, x2, scale, *, eps=1e-6):
+    return _run_jit(x2, scale, eps=eps, block_rows=point["block_rows"],
+                    interpret=api.use_interpret())
+
+
+def _ref(x2, scale, *, eps=1e-6):
+    return rmsnorm_ref(x2, scale, eps)
+
+
+def _clamp(point, x2, scale, **kw):
+    return {"block_rows": api.fit_block(point["block_rows"], x2.shape[0])}
+
+
+def _shape_key(x2, scale, **kw):
+    return f"r{x2.shape[0]}d{x2.shape[1]}:{x2.dtype.name}"
+
+
+def _example(quick: bool):
+    import jax.numpy as jnp
+    r = 512 if quick else 4096
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (r, 1024), jnp.float32).astype(jnp.bfloat16)
+    sc = jnp.ones((1024,), jnp.bfloat16)
+    return (x, sc), {}
+
+
+api.register(api.TunableOp(
+    name="rmsnorm",
+    axes={"block_rows": BLOCK_ROWS_CANDIDATES},
+    default={"block_rows": DEFAULT_BLOCK_ROWS},
+    run=_run,
+    ref=_ref,
+    clamp=_clamp,
+    shape_key=_shape_key,
+    example=_example,
+    exact_axes=frozenset({"block_rows"}),
+    tol=1e-1,
+))
+
+
+def rmsnorm(x, scale, *, eps=1e-6, block_rows=None, use_ref=False):
     orig = x.shape
     x2 = x.reshape(-1, orig[-1])
-    out = rmsnorm_kernel(x2, scale, eps=eps,
-                         block_rows=min(block_rows, x2.shape[0]),
-                         interpret=_use_interpret())
+    point = None if block_rows is None else {"block_rows": block_rows}
+    out = api.call("rmsnorm", x2, scale, eps=eps, point=point,
+                   use_ref=use_ref)
     return out.reshape(orig)

@@ -39,6 +39,7 @@ class CompactionResult:
     files_removed: int = 0
     files_added: int = 0
     bytes_rewritten: int = 0
+    rows_dropped: int = 0                # rows deleted by a filtered rewrite
     gbhr: float = 0.0
     error: Optional[str] = None
 
@@ -106,6 +107,15 @@ def default_merge_fn(table: LogStructuredTable, task: CompactionTask,
         partition=task.scope, created_at=table.now_fn())
 
 
+def _merge_output(out) -> Tuple[DataFile, int]:
+    """Normalize a merge_fn return: plain DataFile, or (DataFile,
+    rows_dropped) from a filtered rewrite."""
+    if isinstance(out, tuple):
+        f, dropped = out
+        return f, int(dropped)
+    return out, 0
+
+
 def _delete_orphans(table: LogStructuredTable,
                     written: Sequence[DataFile]) -> None:
     """Remove output blobs of a rewrite that never committed."""
@@ -121,13 +131,21 @@ def execute_tasks_atomic(table: LogStructuredTable,
                          max_retries: int = 2,
                          executor_memory_gb: float = 8.0,
                          rewrite_bytes_per_hour: float = 256e9,
-                         interleave_fn: Optional[Callable] = None
+                         interleave_fn: Optional[Callable] = None,
+                         filter_fn: Optional[Callable] = None,
+                         fused_filter: bool = True
                          ) -> CompactionResult:
     """Table-scope execution: ALL bins of a candidate rewritten in ONE
     commit (Iceberg's default rewriteDataFiles). The conflict window spans
     the whole rewrite — this is why the paper's table-scope runs hit
     cluster-side conflicts that partition-scope (per-partition commits)
-    avoids."""
+    avoids.
+
+    ``filter_fn`` turns the rewrite into rewrite-deletes-as-compaction:
+    it is forwarded to the merge_fn (with ``fused_filter`` selecting the
+    fused filter+pack kernel vs the filter-then-pack reference), rows it
+    drops never land in the outputs, and the per-bin drop counts sum into
+    ``rows_dropped``."""
     agg = CompactionTask(0, table.table_id, None,
                          tuple(f for t in tasks for f in t.inputs),
                          sum(t.est_output_bytes for t in tasks))
@@ -136,6 +154,8 @@ def execute_tasks_atomic(table: LogStructuredTable,
         res.success = True
         return res
     txn = table.new_transaction()       # plan-time basis for the whole job
+    merge_kwargs = {} if filter_fn is None else \
+        {"filter_fn": filter_fn, "fused_filter": fused_filter}
     new_files = []
     for t in tasks:
         ext = t.inputs[0].path.rsplit(".", 1)[-1] if t.inputs else "bin"
@@ -144,7 +164,10 @@ def execute_tasks_atomic(table: LogStructuredTable,
         out_path = (f"{table.table_id}/data/"
                     f"compacted-{txn.base_version}-{t.task_id}.{ext}")
         try:
-            new_files.append(merge_fn(table, t, out_path))
+            f, dropped = _merge_output(
+                merge_fn(table, t, out_path, **merge_kwargs))
+            new_files.append(f)
+            res.rows_dropped += dropped
         except FileNotFoundError as e:
             res.error = f"missing input: {e}"
             _delete_orphans(table, new_files)
@@ -196,6 +219,7 @@ def execute_tasks_atomic(table: LogStructuredTable,
         # a compaction system must not create small-file garbage: drop the
         # already-written outputs of an uncommitted rewrite
         _delete_orphans(table, new_files)
+        res.rows_dropped = 0             # nothing committed, nothing deleted
         if res.error is None:
             res.error = (f"retries exhausted after {res.retries} "
                          f"conflicting commit attempts")
@@ -208,7 +232,9 @@ def execute_task(table: LogStructuredTable, task: CompactionTask,
                  executor_memory_gb: float = 8.0,
                  rewrite_bytes_per_hour: float = 256e9,
                  fail_fn: Optional[Callable[[CompactionTask], bool]] = None,
-                 interleave_fn: Optional[Callable] = None
+                 interleave_fn: Optional[Callable] = None,
+                 filter_fn: Optional[Callable] = None,
+                 fused_filter: bool = True
                  ) -> CompactionResult:
     """Rewrite one bin and commit.
 
@@ -217,6 +243,11 @@ def execute_task(table: LogStructuredTable, task: CompactionTask,
     the rewrite runs trigger conflict validation at commit — the §4.4/§6.2
     behavior. ``interleave_fn(table)`` (tests/benchmarks) injects concurrent
     work into that window. Retries re-open a fresh-basis transaction.
+
+    ``filter_fn`` (forwarded to merge_fn, with ``fused_filter`` choosing
+    the fused filter+pack kernel vs the two-pass reference) makes this a
+    rewrite-deletes-as-compaction: dropped rows are counted in
+    ``rows_dropped`` and never written to the output.
     """
     res = CompactionResult(task=task, success=False)
     if fail_fn is not None and fail_fn(task):
@@ -228,8 +259,11 @@ def execute_task(table: LogStructuredTable, task: CompactionTask,
     # snapshot basis version advances with every commit
     out_path = (f"{table.table_id}/data/"
                 f"compacted-{txn.base_version}-{task.task_id}.{ext}")
+    merge_kwargs = {} if filter_fn is None else \
+        {"filter_fn": filter_fn, "fused_filter": fused_filter}
     try:
-        new_file = merge_fn(table, task, out_path)
+        new_file, res.rows_dropped = _merge_output(
+            merge_fn(table, task, out_path, **merge_kwargs))
     except FileNotFoundError as e:
         res.error = f"missing input: {e}"
         _delete_orphans(table, [DataFile(out_path, 0, 0, task.scope)])
@@ -270,6 +304,7 @@ def execute_task(table: LogStructuredTable, task: CompactionTask,
         # merged blob never entered table metadata — delete it, a compaction
         # system must not create small-file garbage
         _delete_orphans(table, [new_file])
+        res.rows_dropped = 0             # nothing committed, nothing deleted
         if res.error is None:
             res.error = (f"retries exhausted after {res.retries} "
                          f"conflicting commit attempts")

@@ -261,6 +261,73 @@ class TestFleetKeys:
         assert bench_diff.main(["--current", cur, "--baseline", base]) == 1
 
 
+def _kernel_rec(shape="compact_pack:nsrc128_nout128:int32", **roofline):
+    r = {"arch": "kernel", "shape": shape, "mesh": None,
+         "preset": "kernel-quick", "grad_transport": None,
+         "act_transport": None, "microbatches": None, "remat_block": None,
+         "capacity_factor": None, "status": "ok",
+         "roofline": {"kernel_compact_pack_default_s": 0.004,
+                      "kernel_compact_pack_tuned_s": 0.001}}
+    r["roofline"].update(roofline)
+    return r
+
+
+class TestKernelKeys:
+    """Tunable-kernel cells (bench_kernels --json): the tuned step time per
+    op and the fused filter path's time + plan-derived HBM traffic are
+    gated lower-is-better."""
+
+    def test_kernel_keys_are_gated_lower(self):
+        for op in ("compact_pack", "flash_attn", "decode_attn", "rmsnorm"):
+            assert bench_diff.METRICS[f"kernel_{op}_tuned_s"] == "lower"
+        assert bench_diff.METRICS["kernel_compact_filter_s"] == "lower"
+        assert bench_diff.METRICS["kernel_compact_filter_hbm_bytes"] \
+            == "lower"
+
+    def test_tuned_regression_fails_default_drift_does_not(self):
+        """The serving path reads the tuned point, so only the tuned
+        trajectory gates; the default timing is context."""
+        res = bench_diff.diff_trajectories(
+            [_kernel_rec(kernel_compact_pack_tuned_s=0.0013)],  # +30%
+            [_kernel_rec()])
+        assert [r["metric"] for r in res["regressions"]] \
+            == ["kernel_compact_pack_tuned_s"]
+        res2 = bench_diff.diff_trajectories(
+            [_kernel_rec(kernel_compact_pack_default_s=0.04)],
+            [_kernel_rec()])
+        assert res2["regressions"] == []
+
+    def test_filter_hbm_bytes_growth_fails(self):
+        """The HBM model is plan-derived (deterministic): a plan change
+        that starts re-reading dropped rows must fail even if the
+        stopwatch happens to be quiet."""
+        fshape = "compact_filter:n128_drop50"
+        base = [_kernel_rec(shape=fshape,
+                            kernel_compact_filter_s=0.005,
+                            kernel_compact_filter_hbm_bytes=786432.0)]
+        cur = [_kernel_rec(shape=fshape,
+                           kernel_compact_filter_s=0.005,
+                           kernel_compact_filter_hbm_bytes=1800000.0)]
+        res = bench_diff.diff_trajectories(cur, base)
+        assert [r["metric"] for r in res["regressions"]] \
+            == ["kernel_compact_filter_hbm_bytes"]
+
+    def test_quick_and_full_presets_never_collide(self):
+        base = [_kernel_rec()]
+        cur = [_kernel_rec()]
+        cur[0]["preset"] = "kernel-full"
+        cur[0]["roofline"]["kernel_compact_pack_tuned_s"] = 0.9
+        res = bench_diff.diff_trajectories(cur, base)
+        assert res["compared"] == 0 and res["regressions"] == []
+
+    def test_lost_tuned_key_fails(self, tmp_path):
+        base = _traj(tmp_path / "base.json", [_kernel_rec()])
+        rec = _kernel_rec()
+        del rec["roofline"]["kernel_compact_pack_tuned_s"]
+        cur = _traj(tmp_path / "cur.json", [rec])
+        assert bench_diff.main(["--current", cur, "--baseline", base]) == 1
+
+
 class TestMainGate:
     def test_missing_baseline_tolerated(self, tmp_path):
         cur = _traj(tmp_path / "cur.json", [_rec()])

@@ -76,6 +76,65 @@ class TestCompactionPreservesData:
         assert rows_before == rows_after
 
 
+class TestRewriteDeletes:
+    """Rewrite-deletes-as-compaction through the real execute path: a
+    filter_fn on execute_task routes the merge through the fused
+    filter+pack kernel; fused and reference paths must commit identical
+    tables and identical rows_dropped accounting."""
+
+    @staticmethod
+    def _drop_even(rows, task):
+        return (rows[:, 0] % 2).astype(bool)    # keep odd-leading rows
+
+    def _run(self, fused):
+        _, table, store = make_table()
+        w = TokenShardWriter(table, vocab=997, seed=3)
+        for _ in range(3):
+            w.trickle_append(n_files=6, tokens_per_file=3000)
+        results = [comp.execute_task(table, t, merge_fn=merge_shards_fn,
+                                     filter_fn=self._drop_even,
+                                     fused_filter=fused)
+                   for t in comp.plan_table(table, target_bytes=1 << 20)]
+        assert results and all(r.success for r in results)
+        toks = sorted((decode_shard(store.get(f.path))
+                       for f in table.current_files()),
+                      key=lambda a: (a.shape[0], tuple(a[:8])))
+        return sum(r.rows_dropped for r in results), toks
+
+    def test_fused_and_reference_commit_identical_tables(self):
+        dropped_fused, toks_fused = self._run(fused=True)
+        dropped_ref, toks_ref = self._run(fused=False)
+        assert dropped_fused == dropped_ref > 0
+        assert len(toks_fused) == len(toks_ref)
+        assert all(np.array_equal(a, b)
+                   for a, b in zip(toks_fused, toks_ref))
+        # the filter held: every surviving 128-token row leads odd
+        for t in toks_fused:
+            assert (t.reshape(-1, 128)[:, 0] % 2 == 1).all()
+
+    def test_unfiltered_rewrite_reports_zero_dropped(self):
+        _, table, _ = make_table()
+        w = TokenShardWriter(table, vocab=100, seed=4)
+        w.trickle_append(n_files=6, tokens_per_file=777)
+        for t in comp.plan_table(table, target_bytes=1 << 22):
+            r = comp.execute_task(table, t, merge_fn=merge_shards_fn)
+            assert r.success and r.rows_dropped == 0
+
+    def test_drop_everything_yields_empty_shard(self):
+        _, table, store = make_table()
+        w = TokenShardWriter(table, vocab=100, seed=5)
+        w.trickle_append(n_files=4, tokens_per_file=900)
+        tasks = comp.plan_table(table, target_bytes=1 << 22)
+        res = [comp.execute_task(
+            table, t, merge_fn=merge_shards_fn,
+            filter_fn=lambda rows, task: np.zeros(rows.shape[0], bool))
+            for t in tasks]
+        assert all(r.success for r in res)
+        assert sum(r.rows_dropped for r in res) > 0
+        for f in table.current_files():
+            assert decode_shard(store.get(f.path)).shape[0] == 0
+
+
 class TestPipeline:
     def test_batches_deterministic_by_seed(self):
         _, table, _ = make_table()
