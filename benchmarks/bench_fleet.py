@@ -38,21 +38,45 @@ if __package__ in (None, ""):               # `python benchmarks/bench_fleet.py`
         os.path.abspath(__file__))))
 
 from benchmarks.workload_sim import make_fleet
+from repro.lst.retention import PredicateDelete, RetentionPolicy
 from repro.lst.workload import FleetSpec
 
 MB = 1 << 20
 
 
+def submit_retention_ops(fleet, catalog, fspec: FleetSpec) -> None:
+    """The retention scenario: a standing fleet-wide TTL (routes to tier-1
+    file drops every cycle) plus a one-shot GDPR-style predicate delete on
+    every Nth table (routes to rewrite-deletes priced into the shared
+    budget). The predicate hashes the stable synthetic row id, so the same
+    ~selectivity of rows drops deterministically on every run."""
+    fleet.submit_retention(RetentionPolicy(
+        "ttl", max_age_hours=fspec.retention_max_age_hours))
+    stride = max(1, fspec.gdpr_table_stride)
+    tids = sorted(t.table_id for t in catalog.tables())[::stride]
+    sel = fspec.gdpr_selectivity
+
+    def gdpr_rows(rows, task, _s=sel):
+        ids = np.asarray(rows)[:, 0].astype(np.int64)
+        return ((ids * 2654435761) % (1 << 32)) < int(_s * (1 << 32))
+
+    fleet.submit_delete(PredicateDelete(
+        "gdpr-erasure", row_predicate=gdpr_rows, est_selectivity=sel,
+        tables=tuple(tids)))
+
+
 def run_fleet(n_tables: int = 200, cycles: int = 4, seed: int = 0,
               storm_fraction: float = 0.15, budget_gbhr: float = 12.0,
               starvation_cycles: int = 4,
-              substeps: int = 1) -> Dict[str, Any]:
+              substeps: int = 1, retention: bool = False) -> Dict[str, Any]:
     fspec = FleetSpec(n_tables=n_tables, storm_fraction=storm_fraction,
                       tables_per_db=min(50, max(4, n_tables // 8)),
                       seed=seed)
     clock, catalog, gen, tracker, fleet = make_fleet(
         fspec, budget_gbhr=budget_gbhr,
         starvation_cycles=starvation_cycles)
+    if retention:
+        submit_retention_ops(fleet, catalog, fspec)
 
     per_cycle: List[Dict[str, Any]] = []
     last_read_lat: List[float] = []
@@ -72,6 +96,8 @@ def run_fleet(n_tables: int = 200, cycles: int = 4, seed: int = 0,
             "files_removed": rep.files_removed,
             "max_skip_cycles": rep.max_skip_cycles,
             "class_counts": rep.class_counts,
+            "rows_dropped": rep.rows_dropped,
+            "files_dropped": rep.files_dropped,
             "wall_s": rep.wall_s,
         })
 
@@ -86,6 +112,12 @@ def run_fleet(n_tables: int = 200, cycles: int = 4, seed: int = 0,
         "n_tables": n_tables,
         "cycles": cycles,
         "seed": seed,
+        "retention": retention,
+        "fleet_rows_dropped": totals["rows_dropped"],
+        "fleet_files_dropped": totals["files_dropped"],
+        "fleet_retention_bytes_rewritten":
+            totals["retention_bytes_rewritten"],
+        "fleet_bytes_reclaimed": totals["bytes_reclaimed"],
         "per_cycle": per_cycle,
         "fleet_p99_query_s": pct(last_read_lat, 0.99),
         "fleet_p50_query_s": pct(last_read_lat, 0.50),
@@ -109,14 +141,25 @@ ARTIFACT_KEYS = ("fleet_p99_query_s", "fleet_file_count_final",
 
 def to_record(res: Dict[str, Any]) -> Dict[str, Any]:
     """One BENCH_roofline-shaped record; the shape encodes the fleet size
-    so differently-sized runs never diff against each other."""
+    (and a ``_ret`` suffix for retention runs, which change file counts and
+    spend — a separate lineage) so unlike runs never diff against each
+    other."""
     roofline = {k: float(res[k]) for k in ARTIFACT_KEYS}
     roofline["fleet_small_frac_final"] = float(res["fleet_small_frac_final"])
     roofline["fleet_observe_memo_hit_rate"] = \
         float(res["fleet_observe_memo_hit_rate"])
+    suffix = ""
+    if res.get("retention"):
+        # gated: a scheduler change that starves deletes shrinks
+        # rows_dropped ("higher"); boundary-aligned drops must stay
+        # metadata-only, so rewrite bytes regress upward ("lower")
+        roofline["fleet_rows_dropped"] = float(res["fleet_rows_dropped"])
+        roofline["fleet_retention_bytes_rewritten"] = float(
+            res["fleet_retention_bytes_rewritten"])
+        suffix = "_ret"
     return {
         "arch": "fleet-sim",
-        "shape": f"fleet_{res['n_tables']}t_{res['cycles']}c",
+        "shape": f"fleet_{res['n_tables']}t_{res['cycles']}c{suffix}",
         "mesh": None, "preset": "fleet",
         "grad_transport": None, "act_transport": None,
         "microbatches": None, "remat_block": None, "capacity_factor": None,
@@ -154,6 +197,11 @@ def cli(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--budget", type=float, default=12.0,
                     help="shared GBHr budget per cycle")
     ap.add_argument("--starvation-cycles", type=int, default=4)
+    ap.add_argument("--retention", action="store_true",
+                    help="run the retention scenario: standing TTL + "
+                         "one-shot GDPR delete through the fleet pool "
+                         "(emits the fleet_rows_dropped / "
+                         "fleet_retention_bytes_rewritten gated cells)")
     ap.add_argument("--json", default=None,
                     help="write a BENCH_roofline-shaped artifact here")
     args = ap.parse_args(argv)
@@ -161,19 +209,24 @@ def cli(argv: Optional[List[str]] = None) -> int:
     res = run_fleet(n_tables=args.tables, cycles=args.cycles,
                     seed=args.seed, storm_fraction=args.storm_frac,
                     budget_gbhr=args.budget,
-                    starvation_cycles=args.starvation_cycles)
-    for row in (f"{k},{res[k]}" for k in (
-            "fleet_p99_query_s", "fleet_file_count_final",
+                    starvation_cycles=args.starvation_cycles,
+                    retention=args.retention)
+    keys = ["fleet_p99_query_s", "fleet_file_count_final",
             "fleet_gbhr_total", "fleet_starvation_max_cycles",
             "fleet_small_frac_final", "fleet_observe_memo_hit_rate",
-            "fleet_cycle_wall_s")):
+            "fleet_cycle_wall_s"]
+    if args.retention:
+        keys += ["fleet_rows_dropped", "fleet_files_dropped",
+                 "fleet_retention_bytes_rewritten", "fleet_bytes_reclaimed"]
+    for row in (f"{k},{res[k]}" for k in keys):
         print(row)
     if args.json:
         payload = {"cells": 1, "records": [to_record(res)],
                    "config": {"tables": args.tables, "cycles": args.cycles,
                               "seed": args.seed,
                               "storm_frac": args.storm_frac,
-                              "budget_gbhr": args.budget}}
+                              "budget_gbhr": args.budget,
+                              "retention": args.retention}}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote {args.json}")

@@ -73,6 +73,14 @@ METRICS["disagg_tuned_collective_s"] = "lower"
 for _m in ("fleet_p99_query_s", "fleet_file_count_final",
            "fleet_gbhr_total", "fleet_starvation_max_cycles"):
     METRICS[_m] = "lower"
+# Retention cells (shape suffix "_ret", bench_fleet.py --retention):
+# rows_dropped is higher-is-better — a scheduler/pricing change that
+# starves delete candidates shows up as fewer rows deleted under the same
+# budget and must fail; retention_bytes_rewritten is lower-is-better —
+# boundary-aligned deletes must stay tier-1 metadata drops, so a router
+# change that demotes them to rewrites burns bytes and trips this gate.
+METRICS["fleet_rows_dropped"] = "higher"
+METRICS["fleet_retention_bytes_rewritten"] = "lower"
 
 # Tunable-kernel cells (arch "kernel", benchmarks/bench_kernels.py --json).
 # kernel_<op>_tuned_s is the trajectory the sweep harness must keep

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Docs lint, run in tier-1 CI (scripts/ci.sh).
+
+Two checks keep the documentation spine from rotting:
+
+  1. every package under ``src/repro/`` (a directory with ``__init__.py``)
+     has a ``README.md``;
+  2. every RELATIVE markdown link in ``README.md`` and any
+     ``src/**/README.md`` resolves to an existing file or directory
+     (external http(s)/mailto links and pure #anchors are not checked).
+
+Exit 0 when clean; exit 1 with one line per problem.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def repo_root() -> Path:
+    return Path(__file__).resolve().parent.parent
+
+
+def find_packages(root: Path) -> list[Path]:
+    src = root / "src" / "repro"
+    return sorted(p for p in src.iterdir()
+                  if p.is_dir() and (p / "__init__.py").exists())
+
+
+def missing_readmes(root: Path) -> list[str]:
+    return [f"package {p.relative_to(root)} has no README.md"
+            for p in find_packages(root) if not (p / "README.md").exists()]
+
+
+def doc_files(root: Path) -> list[Path]:
+    docs = []
+    if (root / "README.md").exists():
+        docs.append(root / "README.md")
+    docs += sorted((root / "src").rglob("README.md"))
+    return docs
+
+
+def broken_links(root: Path) -> list[str]:
+    problems = []
+    for doc in doc_files(root):
+        text = doc.read_text(encoding="utf-8")
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (doc.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(
+                    f"{doc.relative_to(root)}: broken link -> {target}")
+    return problems
+
+
+def main() -> int:
+    root = repo_root()
+    problems = missing_readmes(root) + broken_links(root)
+    for p in problems:
+        print(f"[check-docs] {p}")
+    if problems:
+        print(f"[check-docs] FAIL: {len(problems)} problem(s)")
+        return 1
+    n_docs = len(doc_files(root))
+    print(f"[check-docs] OK: {len(find_packages(root))} packages, "
+          f"{n_docs} README(s), all links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,5 +13,9 @@ if [[ "${SKIP_INSTALL:-0}" != "1" ]]; then
     python -m pip install -r requirements-dev.txt
 fi
 
+# docs lint: every src/repro/* package has a README and every relative
+# markdown link in the doc spine resolves
+python scripts/check_docs.py
+
 # --durations=15 keeps slow-test creep visible in every CI log
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q --durations=15 "$@"

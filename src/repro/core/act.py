@@ -16,6 +16,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.model import Candidate, Scope
 from repro.lst import compaction as comp
+from repro.lst import retention as ret
 from repro.lst.compaction import CompactionResult, CompactionTask
 
 
@@ -44,6 +45,14 @@ class ActReport:
         return sum(r.gbhr for r in self.results)
 
     @property
+    def rows_dropped(self) -> int:
+        return sum(r.rows_dropped for r in self.results)
+
+    @property
+    def bytes_reclaimed(self) -> int:
+        return sum(r.bytes_reclaimed for r in self.results)
+
+    @property
     def conflicts(self) -> int:
         return sum(1 for r in self.results if r.conflict)
 
@@ -60,7 +69,8 @@ class Scheduler:
                  offpeak_window: Optional[Callable[[], bool]] = None,
                  max_retries: int = 2,
                  fail_fn: Optional[Callable] = None,
-                 interleave_fn: Optional[Callable] = None) -> None:
+                 interleave_fn: Optional[Callable] = None,
+                 fused_filter: bool = True) -> None:
         self.target = target_file_bytes
         self.merge_fn = merge_fn
         self.executor_memory_gb = executor_memory_gb
@@ -69,6 +79,7 @@ class Scheduler:
         self.max_retries = max_retries
         self.fail_fn = fail_fn
         self.interleave_fn = interleave_fn  # concurrent-writer injection
+        self.fused_filter = fused_filter    # rewrite-delete kernel choice
 
     @staticmethod
     def _tasks_for(cand: Candidate,
@@ -83,6 +94,32 @@ class Scheduler:
         scope = "partition" if cand.scope == Scope.PARTITION else "table"
         tasks = comp.plan_table(cand.table, self.target, scope=scope)
         return self._tasks_for(cand, tasks)
+
+    def _execute_delete(self, cand: Candidate) -> List[CompactionResult]:
+        """Delete-candidate dispatch (see ``lst.retention``): tier-1 file
+        drops commit one zero-byte metadata snapshot; tier-2 files are
+        binned and rewritten through the ordinary single-task commit path
+        with the op's keep-mask filter attached (fused filter+pack by
+        default, the two-pass reference with ``fused_filter=False``)."""
+        route = cand.delete_route
+        results: List[CompactionResult] = []
+        if route.file_drops:
+            results.append(ret.execute_file_drops(
+                cand.table, route.file_drops, max_retries=self.max_retries,
+                interleave_fn=self.interleave_fn))
+        if route.rewrite_files:
+            keep = route.op.filter_fn()
+            for task in ret.plan_rewrite_delete(cand.table,
+                                                route.rewrite_files,
+                                                self.target):
+                results.append(comp.execute_task(
+                    cand.table, task, merge_fn=self.merge_fn,
+                    max_retries=self.max_retries,
+                    executor_memory_gb=self.executor_memory_gb,
+                    rewrite_bytes_per_hour=self.rewrite_bytes_per_hour,
+                    fail_fn=self.fail_fn, interleave_fn=self.interleave_fn,
+                    filter_fn=keep, fused_filter=self.fused_filter))
+        return results
 
     def execute(self, selected: Sequence[Candidate]) -> ActReport:
         """Tables are independent units (parallelizable); within a table,
@@ -114,6 +151,12 @@ class Scheduler:
         for table_id in sorted(by_table):
             table_tasks: Optional[List[CompactionTask]] = None
             for cand in by_table[table_id]:
+                if cand.delete_route is not None:
+                    results = self._execute_delete(cand)
+                    cand.delete_results = results  # type: ignore[attr-defined]
+                    report.results.extend(results)
+                    table_tasks = None   # table changed: replan later bins
+                    continue
                 tasks: List[CompactionTask] = []
                 if table_tasks is not None:
                     tasks = self._tasks_for(cand, table_tasks)

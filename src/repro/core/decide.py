@@ -33,6 +33,26 @@ def minmax_normalize(cands: Sequence[Candidate], trait_names: Sequence[str]
                 (c.traits.get(name, 0.0) - lo) / span
 
 
+FLEET_NORM_TRAITS = ("file_count_reduction", "reclaim_bytes", "compute_cost")
+
+
+def pooled_benefit(c: Candidate) -> float:
+    """Benefit of a pooled (fleet) candidate: normalized file-count
+    reduction PLUS normalized reclaimed bytes.
+
+    The reclaim term is the rewrite-delete pricing fix: a delete
+    candidate's value is the rows/bytes it removes from the table, and a
+    drop-heavy candidate — a GDPR rewrite over two large files, a
+    retention drop of one cold partition — may barely reduce the file
+    count at all. Scoring benefit on ``file_count_reduction`` alone priced
+    such candidates near zero, so they never won the shared budget against
+    ordinary compaction no matter how many bytes they reclaimed. Pools
+    without any ``reclaim_bytes`` trait are unaffected: min-max
+    normalization maps the all-absent trait to 0 for every candidate."""
+    return (c.normalized.get("file_count_reduction", 0.0)
+            + c.normalized.get("reclaim_bytes", 0.0))
+
+
 @dataclasses.dataclass
 class ThresholdPolicy:
     """Unconstrained regime: fire when ``trait >= threshold`` (absolute) or,

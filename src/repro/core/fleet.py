@@ -49,13 +49,16 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.act import ActReport, Scheduler
-from repro.core.decide import MoopRanker, minmax_normalize, select_budget
+from repro.core.decide import (FLEET_NORM_TRAITS, MoopRanker,
+                               minmax_normalize, pooled_benefit,
+                               select_budget)
 from repro.core.filters import MinSmallFilesFilter
 from repro.core.model import Candidate, Scope
 from repro.core.observe import StatsCollector
 from repro.core.ooda import AutoCompPipeline
 from repro.core.orient import (ComputeCostTrait, FileCountReductionTrait,
                                FileEntropyTrait, TraitContext)
+from repro.core.retention import RetentionQueue
 from repro.lst.catalog import Catalog
 
 MB = 1 << 20
@@ -148,6 +151,7 @@ class FleetCycleReport:
     fleet-level accounting the bench artifact and the gate read."""
     n_tables: int = 0
     n_candidates: int = 0
+    n_delete_candidates: int = 0
     n_selected: int = 0
     n_unpriced: int = 0
     selected_keys: List = dataclasses.field(default_factory=list)
@@ -159,6 +163,11 @@ class FleetCycleReport:
     max_skip_cycles: int = 0             # worst aging among fragmented tables
     act: Optional[ActReport] = None
     wall_s: float = 0.0
+    # retention accounting (delete candidates only; see core.retention)
+    rows_dropped: int = 0
+    files_dropped: int = 0               # tier-1 metadata drops (0 bytes)
+    retention_bytes_rewritten: int = 0   # tier-2 rewrite-delete bytes
+    bytes_reclaimed: int = 0
 
     @property
     def files_removed(self) -> int:
@@ -182,10 +191,13 @@ class FleetScheduler:
                  benefit_weight: float = 0.7,
                  max_k: Optional[int] = None,
                  classify_fn: Optional[Callable[..., str]] = None,
-                 pipeline_factory: Callable = build_class_pipeline) -> None:
+                 pipeline_factory: Callable = build_class_pipeline,
+                 retention: Optional[RetentionQueue] = None) -> None:
         self.catalog = catalog
         self.budget_gbhr = budget_gbhr
         self.activity = activity
+        self.retention = retention if retention is not None \
+            else RetentionQueue()
         self.profiles = dict(profiles if profiles is not None
                              else DEFAULT_PROFILES)
         self.starvation_cycles = starvation_cycles
@@ -225,6 +237,18 @@ class FleetScheduler:
                 target, activity=self.activity)
         return self._collectors[target]
 
+    # ------------------------------------------------------------- retention
+    def submit_retention(self, policy) -> None:
+        """Queue a standing ``lst.retention.RetentionPolicy``; every cycle
+        routes it and pools a candidate when files currently age out."""
+        self.retention.submit(policy)
+
+    def submit_delete(self, op) -> None:
+        """Queue a one-shot ``lst.retention.PredicateDelete``; it stays
+        pending — surviving deferral and conflicts — until its routed work
+        commits on every target table."""
+        self.retention.submit(op)
+
     def set_profile(self, profile: ClassProfile) -> None:
         """Swap a class's policy profile (rebuilds its pipeline around the
         shared collector for the profile's target size)."""
@@ -260,7 +284,7 @@ class FleetScheduler:
         candidates. Returns (ranked, selected, unpriced). Pure given the
         pool and aging state; input order never matters (NFR2)."""
         pool = sorted(pool, key=lambda c: c.key)
-        minmax_normalize(pool, ["file_count_reduction", "compute_cost"])
+        minmax_normalize(pool, list(FLEET_NORM_TRAITS))
         qf = [c.stats.custom.get("query_freq", 0.0) if c.stats else 0.0
               for c in pool]
         lo, hi = (min(qf), max(qf)) if qf else (0.0, 0.0)
@@ -268,8 +292,7 @@ class FleetScheduler:
         n_starve = max(1, self.starvation_cycles)
         for c, q in zip(pool, qf):
             qn = 0.0 if span <= 0 else (q - lo) / span
-            benefit = c.normalized.get("file_count_reduction", 0.0) \
-                * (1.0 + self.query_weight * qn)
+            benefit = pooled_benefit(c) * (1.0 + self.query_weight * qn)
             skip = self.skip_cycles.get(c.table.table_id, 0)
             c.score = (self.benefit_weight * benefit
                        - (1.0 - self.benefit_weight)
@@ -292,7 +315,15 @@ class FleetScheduler:
                   tables: Optional[Sequence] = None) -> FleetCycleReport:
         t0 = time.perf_counter()
         catalog = catalog if catalog is not None else self.catalog
-        tables = list(tables if tables is not None else catalog.tables())
+        explicit = tables is not None
+        tables = list(tables if explicit else catalog.tables())
+        if explicit and self.retention.has_pending():
+            # an after_write cycle only sees dirty tables; retention work on
+            # quiet tables must still enter the pool (a compliance delete
+            # can't wait for someone to write to the table)
+            have = {t.table_id for t in tables}
+            tables += [t for t in self.retention.target_tables(catalog)
+                       if t.table_id not in have]
         rep = FleetCycleReport(n_tables=len(tables),
                                budget_gbhr=self.budget_gbhr)
 
@@ -311,6 +342,15 @@ class FleetScheduler:
                 c.fleet_class = cls        # type: ignore[attr-defined]
             pool.extend(cands)
             rep.class_counts[cls] = len(groups[cls])
+        # pending delete ops enter the same pool (priced, see core.retention)
+        cls_of = {t.table_id: cls
+                  for cls, ts in groups.items() for t in ts}
+        del_cands = self.retention.propose(tables, activity=self.activity)
+        for c in del_cands:
+            c.fleet_class = cls_of.get(  # type: ignore[attr-defined]
+                c.table.table_id, "steady")
+        pool.extend(del_cands)
+        rep.n_delete_candidates = len(del_cands)
         rep.n_candidates = len(pool)
 
         # fleet decide
@@ -332,6 +372,22 @@ class FleetScheduler:
             act.deferred.extend(sub.deferred)
         rep.act = act
         rep.deferred_keys = [c.key for c in act.deferred]
+
+        # retention accounting + one-shot completion (deferred deletes stay
+        # pending in the queue and re-enter next cycle's pool)
+        deferred_ids = {id(c) for c in act.deferred}
+        for c in selected:
+            if c.delete_route is None or id(c) in deferred_ids:
+                continue
+            results = getattr(c, "delete_results", [])
+            rep.rows_dropped += sum(r.rows_dropped for r in results)
+            rep.files_dropped += sum(
+                r.files_removed for r in results
+                if r.files_added == 0 and r.bytes_rewritten == 0)
+            rep.retention_bytes_rewritten += sum(
+                r.bytes_rewritten for r in results)
+            rep.bytes_reclaimed += sum(r.bytes_reclaimed for r in results)
+            self.retention.note_executed(c)
 
         # aging: fragmented-but-unserved tables age; served tables reset.
         # Deferred candidates were selected but NOT executed — they still
@@ -367,4 +423,9 @@ class FleetScheduler:
             "max_skip_cycles": self.max_skip_ever,
             "deferred": sum(len(r.deferred_keys) for r in self.reports),
             "unpriced": sum(r.n_unpriced for r in self.reports),
+            "rows_dropped": sum(r.rows_dropped for r in self.reports),
+            "files_dropped": sum(r.files_dropped for r in self.reports),
+            "retention_bytes_rewritten": sum(
+                r.retention_bytes_rewritten for r in self.reports),
+            "bytes_reclaimed": sum(r.bytes_reclaimed for r in self.reports),
         }

@@ -33,7 +33,9 @@ class CandidateStats:
 @dataclasses.dataclass
 class Candidate:
     """A collection of files to be compacted (§4.1): table, partition, or
-    snapshot scoped."""
+    snapshot scoped. A candidate carrying a ``delete_route`` is a DELETE
+    entering the pool (see ``core.retention``): its act dispatch drops/
+    rewrites the routed files instead of bin-packing the scope."""
     table: LogStructuredTable
     scope: Scope
     partition: Optional[str] = None
@@ -42,10 +44,13 @@ class Candidate:
     traits: Dict[str, float] = dataclasses.field(default_factory=dict)
     normalized: Dict[str, float] = dataclasses.field(default_factory=dict)
     score: float = 0.0
+    delete_route: Optional[Any] = None   # lst.retention.DeleteRoute
 
     @property
-    def key(self) -> Tuple[str, str, str]:
-        return (self.table.table_id, self.scope.value, self.partition or "")
+    def key(self) -> Tuple[str, str, str, str]:
+        op = self.delete_route.op if self.delete_route is not None else None
+        return (self.table.table_id, self.scope.value, self.partition or "",
+                getattr(op, "name", ""))
 
     def files(self) -> Tuple[DataFile, ...]:
         files = self.table.current_files(self.snapshot_id)

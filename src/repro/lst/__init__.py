@@ -2,3 +2,6 @@ from repro.lst.files import DataFile, ManifestFile, Snapshot, TableMetadata  # n
 from repro.lst.storage import InMemoryStore, LocalFSStore, ObjectStore  # noqa
 from repro.lst.table import CommitConflict, LogStructuredTable, Transaction  # noqa
 from repro.lst.catalog import Catalog, Namespace  # noqa
+from repro.lst.retention import (DeleteRoute, PredicateDelete,  # noqa
+                                 RetentionPolicy, execute_file_drops,
+                                 plan_rewrite_delete, route_delete)

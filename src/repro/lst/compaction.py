@@ -40,7 +40,8 @@ class CompactionResult:
     files_added: int = 0
     bytes_rewritten: int = 0
     rows_dropped: int = 0                # rows deleted by a filtered rewrite
-    gbhr: float = 0.0
+    bytes_reclaimed: int = 0             # input bytes that left the table:
+    gbhr: float = 0.0                    # dropped files + filtered-out rows
     error: Optional[str] = None
 
 
@@ -96,15 +97,41 @@ def plan_table(table: LogStructuredTable, target_bytes: int,
 
 
 def default_merge_fn(table: LogStructuredTable, task: CompactionTask,
-                     out_path: str) -> DataFile:
-    """Synthetic merge: concatenates the raw payloads of the inputs."""
+                     out_path: str, filter_fn: Optional[Callable] = None,
+                     fused_filter: bool = True):
+    """Synthetic merge: concatenates the raw payloads of the inputs.
+
+    With ``filter_fn`` it models a rewrite-delete over synthetic rows: each
+    input row is represented by a stable integer id (crc32 of its file path
+    plus the row index, column 0 of the rows array), so a deterministic
+    predicate — e.g. a GDPR-style hash match on the id — drops the same
+    rows on every plan. Output payload, size and row count shrink to the
+    kept fraction; returns ``(DataFile, rows_dropped)`` like the real
+    token-shard merge. ``fused_filter`` is accepted for signature parity
+    (there is no kernel here to fuse)."""
     blobs = [table.store.get(f.path) for f in task.inputs]
     data = b"".join(blobs)
-    table.store.put(out_path, data)
-    return DataFile(
-        path=out_path, size_bytes=sum(f.size_bytes for f in task.inputs),
-        num_rows=sum(f.num_rows for f in task.inputs),
-        partition=task.scope, created_at=table.now_fn())
+    in_bytes = sum(f.size_bytes for f in task.inputs)
+    n_rows = sum(f.num_rows for f in task.inputs)
+    if filter_fn is None:
+        table.store.put(out_path, data)
+        return DataFile(path=out_path, size_bytes=in_bytes, num_rows=n_rows,
+                        partition=task.scope, created_at=table.now_fn())
+    import zlib
+
+    import numpy as np
+    ids = (np.concatenate(
+        [zlib.crc32(f.path.encode()) + np.arange(f.num_rows, dtype=np.int64)
+         for f in task.inputs])
+        if n_rows else np.zeros((0,), np.int64))
+    keep = np.asarray(filter_fn(ids.reshape(-1, 1), task), bool).reshape(-1)
+    kept = int(keep.sum())
+    frac = kept / n_rows if n_rows else 0.0
+    out_bytes = int(round(in_bytes * frac))
+    table.store.put(out_path, data[:out_bytes] if out_bytes else b"")
+    out = DataFile(path=out_path, size_bytes=out_bytes, num_rows=kept,
+                   partition=task.scope, created_at=table.now_fn())
+    return out, n_rows - kept
 
 
 def _merge_output(out) -> Tuple[DataFile, int]:
@@ -213,6 +240,9 @@ def execute_tasks_atomic(table: LogStructuredTable,
         res.files_removed = len(live_inputs)
         res.files_added = len(new_files)
         res.bytes_rewritten = sum(f.size_bytes for f in live_inputs)
+        if filter_fn is not None:
+            res.bytes_reclaimed = max(0, res.bytes_rewritten
+                                      - sum(f.size_bytes for f in new_files))
         res.gbhr = executor_memory_gb * (res.bytes_rewritten
                                          / rewrite_bytes_per_hour)
     else:
@@ -296,6 +326,9 @@ def execute_task(table: LogStructuredTable, task: CompactionTask,
         res.files_removed = len(live_inputs)
         res.files_added = 1
         res.bytes_rewritten = sum(f.size_bytes for f in live_inputs)
+        if filter_fn is not None:
+            res.bytes_reclaimed = max(0, res.bytes_rewritten
+                                      - new_file.size_bytes)
         # paper §4.2: GBHr_c = ExecutorMemoryGB * DataSize_c / RewriteBytesPerHour
         res.gbhr = executor_memory_gb * (res.bytes_rewritten
                                          / rewrite_bytes_per_hour)

@@ -115,9 +115,10 @@ class LogStructuredTable:
         txn.rewrite_files(removed, added, scope)
         return txn.commit()
 
-    def delete_files(self, removed: Sequence[DataFile]) -> Snapshot:
+    def delete_files(self, removed: Sequence[DataFile],
+                     scope: Optional[str] = None) -> Snapshot:
         txn = self.new_transaction()
-        txn.remove_files(removed)
+        txn.remove_files(removed, scope=scope)
         return txn.commit()
 
     # ------------------------------------------------------------ maintenance
@@ -256,9 +257,14 @@ class Transaction:
         self.operation = "append"
         return self
 
-    def remove_files(self, files: Sequence[DataFile]) -> "Transaction":
+    def remove_files(self, files: Sequence[DataFile],
+                     scope: Optional[str] = None) -> "Transaction":
+        """File-level delete. ``scope`` narrows the conflict window under
+        partition granularity when every removed file shares one partition
+        (a partition-aligned retention drop), exactly as rewrites do."""
         self.removed.extend(files)
         self.operation = "delete"
+        self.scope = scope
         return self
 
     def rewrite_files(self, removed: Sequence[DataFile],

@@ -78,6 +78,13 @@ class FleetSpec:
     storm_files_per_write: Tuple[int, int] = (20, 60)
     storm_writes_per_hour: float = 6.0
     seed: int = 0
+    # retention scenario knobs (only read when the bench enables retention):
+    # a standing TTL dropping files older than this many sim-hours, and a
+    # one-shot GDPR-style predicate delete over every Nth table dropping
+    # ~selectivity of its rows
+    retention_max_age_hours: float = 2.0
+    gdpr_table_stride: int = 7
+    gdpr_selectivity: float = 0.05
 
 
 @dataclasses.dataclass

@@ -261,6 +261,57 @@ class TestFleetKeys:
         assert bench_diff.main(["--current", cur, "--baseline", base]) == 1
 
 
+def _retention_rec(**roofline):
+    r = _fleet_rec(shape="fleet_48t_3c_ret",
+                   fleet_rows_dropped=1_000_000.0,
+                   fleet_retention_bytes_rewritten=5e9)
+    r["roofline"].update(roofline)
+    return r
+
+
+class TestRetentionKeys:
+    """PR 8's retention cells: rows_dropped is gated HIGHER (a change that
+    starves deletes shrinks it), tier-2 rewrite bytes LOWER (aligned
+    deletes must stay metadata-only)."""
+
+    def test_directions(self):
+        assert bench_diff.METRICS["fleet_rows_dropped"] == "higher"
+        assert bench_diff.METRICS["fleet_retention_bytes_rewritten"] \
+            == "lower"
+
+    def test_rows_dropped_shrinking_fails(self):
+        res = bench_diff.diff_trajectories(
+            [_retention_rec(fleet_rows_dropped=700_000.0)],   # -30%
+            [_retention_rec()])
+        assert [r["metric"] for r in res["regressions"]] \
+            == ["fleet_rows_dropped"]
+
+    def test_rewrite_bytes_growth_fails(self):
+        """A router change that sends boundary-aligned deletes to tier-2
+        rewrites shows up as byte growth and trips the gate."""
+        res = bench_diff.diff_trajectories(
+            [_retention_rec(fleet_retention_bytes_rewritten=7e9)],  # +40%
+            [_retention_rec()])
+        assert [r["metric"] for r in res["regressions"]] \
+            == ["fleet_retention_bytes_rewritten"]
+
+    def test_more_deletes_fewer_bytes_passes(self):
+        res = bench_diff.diff_trajectories(
+            [_retention_rec(fleet_rows_dropped=2_000_000.0,
+                            fleet_retention_bytes_rewritten=1e9)],
+            [_retention_rec()])
+        assert res["regressions"] == []
+
+    def test_retention_cell_is_its_own_lineage(self, tmp_path):
+        """Turning --retention on starts a fresh `_ret` cell; the old
+        non-retention cell disappearing entirely is NOT a lost-key
+        failure (cells present on only one side never diff)."""
+        base = _traj(tmp_path / "base.json",
+                     [_fleet_rec(shape="fleet_48t_3c")])
+        cur = _traj(tmp_path / "cur.json", [_retention_rec()])
+        assert bench_diff.main(["--current", cur, "--baseline", base]) == 0
+
+
 def _kernel_rec(shape="compact_pack:nsrc128_nout128:int32", **roofline):
     r = {"arch": "kernel", "shape": shape, "mesh": None,
          "preset": "kernel-quick", "grad_transport": None,

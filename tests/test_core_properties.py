@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.decide import (MoopRanker, minmax_normalize,
+from repro.core.decide import (FLEET_NORM_TRAITS, MoopRanker,
+                               minmax_normalize, pooled_benefit,
                                quota_adaptive_weights, select_budget,
                                select_topk)
 from repro.core.model import Candidate, CandidateStats, Scope
@@ -163,6 +164,85 @@ class TestRanking:
         assert w["file_count_reduction"] == pytest.approx(
             min(1.0, 0.5 * (1 + util)))
         assert sum(w.values()) == pytest.approx(1.0)
+
+
+class TestPooledBenefit:
+    """The fleet pool's benefit term (PR 8 pricing fix): reclaimed bytes
+    count alongside file-count reduction, so a drop-heavy delete candidate
+    can win the shared budget; pools with no delete candidates are
+    unchanged."""
+
+    def _pool(self, vals):
+        out = []
+        for i, (fcr, reclaim, cost) in enumerate(vals):
+            cand = mk_candidate([MB], table_id=f"ns/t{i:03d}")
+            cand.traits = {"file_count_reduction": float(fcr),
+                           "compute_cost": float(cost)}
+            if reclaim is not None:
+                cand.traits["reclaim_bytes"] = float(reclaim)
+            out.append(cand)
+        minmax_normalize(out, list(FLEET_NORM_TRAITS))
+        return out
+
+    @given(st.lists(st.tuples(st.floats(0, 1e4), st.floats(0, 1e12),
+                              st.floats(0, 10)),
+                    min_size=1, max_size=25))
+    @settings(max_examples=30, deadline=None)
+    def test_benefit_bounded_and_monotone_in_reclaim(self, vals):
+        pool = self._pool(vals)
+        for c in pool:
+            assert 0.0 <= pooled_benefit(c) <= 2.0
+        top = max(v[1] for v in vals)
+        for c, (fcr, reclaim, _) in zip(pool, vals):
+            if reclaim == top and all(v[0] == fcr for v in vals):
+                # equal file-count reduction: max reclaim is max benefit
+                assert pooled_benefit(c) == pytest.approx(
+                    max(pooled_benefit(x) for x in pool))
+
+    @given(st.lists(st.tuples(st.floats(0, 1e4), st.floats(0, 10)),
+                    min_size=1, max_size=25))
+    @settings(max_examples=30, deadline=None)
+    def test_pool_without_reclaim_trait_unchanged(self, vals):
+        """An all-absent trait normalizes to 0 for everyone: benefit
+        degenerates to normalized file-count reduction exactly."""
+        pool = self._pool([(fcr, None, cost) for fcr, cost in vals])
+        for c in pool:
+            assert pooled_benefit(c) == pytest.approx(
+                c.normalized.get("file_count_reduction", 0.0))
+
+    def test_drop_heavy_delete_wins_budget_over_compaction(self):
+        """A GDPR rewrite over two large files barely reduces file count;
+        under file-count-only benefit it lost the budget to ANY ordinary
+        compaction. With the reclaim term it outranks the mid-tier
+        compaction, and a two-slot budget picks it over that compaction."""
+        pool = self._pool([
+            (40.0, 0.0, 2.0),            # big compaction, no bytes deleted
+            (30.0, 0.0, 2.0),            # mid compaction: used to beat...
+            (2.0, 5e10, 2.0),            # ...this drop-heavy delete
+        ])
+        for c in pool:
+            c.score = pooled_benefit(c)
+        big, mid, delete = pool
+        assert pooled_benefit(delete) > pooled_benefit(mid)
+        ranked = sorted(pool, key=lambda c: (-c.score,) + c.key)
+        sel = select_budget(ranked, budget_gbhr=4.0)   # room for two
+        assert delete in sel and mid not in sel
+        # old pricing (file count only) inverted that choice
+        old = sorted(pool, key=lambda c: (
+            -c.normalized["file_count_reduction"],) + c.key)
+        assert delete not in select_budget(old, budget_gbhr=4.0)
+
+    def test_file_drop_costs_explicit_zero_not_unpriced(self):
+        """A pure file-drop candidate is priced-FREE (0.0), never
+        conservative-skipped: it fits any budget, including 0."""
+        pool = self._pool([(5.0, 1e9, 0.0), (50.0, 0.0, 3.0)])
+        for c in pool:
+            c.score = pooled_benefit(c)
+        unpriced = []
+        sel = select_budget(sorted(pool, key=lambda c: (-c.score,) + c.key),
+                            budget_gbhr=0.0, unpriced=unpriced)
+        assert unpriced == []
+        assert [c.traits["compute_cost"] for c in sel] == [0.0]
 
 
 class TestBinpack:

@@ -1,0 +1,453 @@
+"""Tiered DELETE/retention (lst/retention.py + core/retention.py).
+
+Router decision table, the tier-1 metadata-only drop guarantee under
+concurrent writers (mirrors compaction's live-input accounting tests), the
+tier-2 rewrite planner, and the fleet integration: delete candidates enter
+the shared-budget pool, file drops are budget-free, one-shot ops retire,
+standing policies re-route, deferred deletes stay pending, and a
+rewrite-delete through the fleet commits bit-identical tables on the fused
+and reference filter paths.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.act import Scheduler
+from repro.core.fleet import ClassProfile, FleetScheduler, build_class_pipeline
+from repro.lst import (Catalog, InMemoryStore, PredicateDelete,
+                       RetentionPolicy, execute_file_drops,
+                       plan_rewrite_delete, route_delete)
+from repro.lst import compaction as comp
+from repro.lst.files import DataFile
+from repro.lst.workload import SimClock
+
+MB = 1 << 20
+_FILE_IDS = itertools.count(1)
+
+
+def make_table(granularity="table", partition_spec="p"):
+    clock = SimClock()
+    store = InMemoryStore()
+    cat = Catalog(store, now_fn=clock.now)
+    t = cat.create_table("ns", "t", partition_spec,
+                         properties={"conflict_granularity": granularity})
+    t.now_fn = clock.now
+    return clock, cat, t, store
+
+
+def add_files(t, n, size=4 * MB, parts=("a", "b"), created_at=0.0, rows=10):
+    files = []
+    for i in range(n):
+        fid = next(_FILE_IDS)
+        path = f"{t.table_id}/data/f{fid:06d}.bin"
+        t.store.put(path, b"x" * 128)
+        files.append(DataFile(path, size, rows, parts[i % len(parts)],
+                              created_at=created_at))
+    t.append(files)
+    return files
+
+
+# --------------------------------------------------------------- the router
+
+class TestRouter:
+    def test_age_based_retention_drops_aged_files(self):
+        clock, _, t, _ = make_table()
+        old = add_files(t, 4, created_at=0.0)
+        clock.advance(48.0)
+        young = add_files(t, 2, created_at=clock.now())
+        route = route_delete(t, RetentionPolicy("ttl", max_age_hours=24.0))
+        assert {f.path for f in route.file_drops} == {f.path for f in old}
+        assert route.rewrite_files == ()
+        assert route.drop_rows == sum(f.num_rows for f in old)
+        assert all(f.path not in {d.path for d in route.file_drops}
+                   for f in young)
+
+    def test_nothing_aged_routes_empty(self):
+        clock, _, t, _ = make_table()
+        add_files(t, 4)
+        clock.advance(10.0)
+        route = route_delete(t, RetentionPolicy("ttl", max_age_hours=24.0))
+        assert route.empty
+
+    def test_partition_drop_is_exact(self):
+        _, _, t, _ = make_table()
+        files = add_files(t, 6, parts=("a", "b"))
+        route = route_delete(t, RetentionPolicy("drop-a",
+                                                drop_partitions=("a",)))
+        assert {f.path for f in route.file_drops} == \
+            {f.path for f in files if f.partition == "a"}
+        assert route.rewrite_files == ()
+
+    def test_retention_policy_never_rewrites(self):
+        clock, _, t, _ = make_table()
+        add_files(t, 8, parts=("a", "b", "c"))
+        clock.advance(100.0)
+        route = route_delete(t, RetentionPolicy(
+            "both", max_age_hours=1.0, drop_partitions=("b",)))
+        assert route.rewrite_files == ()
+        assert len(route.file_drops) == 8
+
+    def test_predicate_file_evidence_tiers(self):
+        """file_predicate True -> drop, False -> keep, None -> rewrite."""
+        _, _, t, _ = make_table()
+        add_files(t, 6, parts=("a", "b", "c"))
+        verdict = {"a": True, "b": False, "c": None}
+        op = PredicateDelete(
+            "gdpr", row_predicate=lambda rows, task: rows[:, 0] < 0,
+            file_predicate=lambda f: verdict[f.partition])
+        route = route_delete(t, op)
+        assert {f.partition for f in route.file_drops} == {"a"}
+        assert {f.partition for f in route.rewrite_files} == {"c"}
+
+    def test_predicate_without_file_evidence_rewrites_everything(self):
+        _, _, t, _ = make_table()
+        files = add_files(t, 5)
+        op = PredicateDelete("gdpr",
+                             row_predicate=lambda rows, task: rows[:, 0] < 0)
+        route = route_delete(t, op)
+        assert route.file_drops == ()
+        assert len(route.rewrite_files) == len(files)
+
+    def test_est_reclaim_prices_drops_full_and_rewrites_by_selectivity(self):
+        _, _, t, _ = make_table()
+        add_files(t, 4, size=10 * MB, parts=("a", "b"))
+        op = PredicateDelete(
+            "gdpr", row_predicate=lambda rows, task: rows[:, 0] < 0,
+            file_predicate=lambda f: True if f.partition == "a" else None,
+            est_selectivity=0.25)
+        route = route_delete(t, op)
+        assert route.est_reclaim_bytes == pytest.approx(
+            route.drop_bytes + 0.25 * route.rewrite_bytes)
+        assert route.drop_bytes == 20 * MB and route.rewrite_bytes == 20 * MB
+
+    def test_table_scoping(self):
+        op = RetentionPolicy("ttl", max_age_hours=1.0, tables=("ns/t",))
+        assert op.applies_to("ns/t") and not op.applies_to("ns/other")
+
+
+# ------------------------------------------------------- tier-2 bin planner
+
+class TestRewritePlan:
+    def test_never_crosses_partitions(self):
+        _, _, t, _ = make_table()
+        files = add_files(t, 10, parts=("a", "b"))
+        for task in plan_rewrite_delete(t, files, target_bytes=64 * MB):
+            assert len({f.partition for f in task.inputs}) == 1
+
+    def test_every_matched_file_planned_no_size_cutoff(self):
+        """Unlike plan_binpack: a lone small file and an over-target file
+        both MUST be rewritten — a delete has no minimum batch."""
+        _, _, t, _ = make_table()
+        small = add_files(t, 1, size=1 * MB, parts=("a",))
+        big = add_files(t, 1, size=600 * MB, parts=("b",))
+        tasks = plan_rewrite_delete(t, small + big, target_bytes=512 * MB)
+        planned = {f.path for task in tasks for f in task.inputs}
+        assert planned == {small[0].path, big[0].path}
+        assert all(len(task.inputs) >= 1 for task in tasks)
+
+    def test_plan_scoped_ids_deterministic(self):
+        _, _, t, _ = make_table()
+        files = add_files(t, 9, parts=("a", "b", "c"))
+        a = plan_rewrite_delete(t, files, target_bytes=8 * MB)
+        b = plan_rewrite_delete(t, files, target_bytes=8 * MB)
+        assert [(task.task_id, tuple(f.path for f in task.inputs))
+                for task in a] == \
+               [(task.task_id, tuple(f.path for f in task.inputs))
+                for task in b]
+        assert [task.task_id for task in a] == list(range(1, len(a) + 1))
+
+
+# ------------------------------------------------------ tier-1 file drops
+
+class TestFileDrops:
+    def test_drop_is_metadata_only(self):
+        """The tier-1 guarantee: one `delete` snapshot, ZERO bytes
+        rewritten, zero GBHr, blobs physically reclaimed."""
+        clock, _, t, store = make_table()
+        files = add_files(t, 6)
+        clock.advance(48.0)
+        route = route_delete(t, RetentionPolicy("ttl", max_age_hours=24.0))
+        res = execute_file_drops(t, route.file_drops)
+        assert res.success
+        assert res.bytes_rewritten == 0
+        assert res.gbhr == 0.0
+        assert res.files_removed == 6
+        assert res.rows_dropped == sum(f.num_rows for f in files)
+        assert res.bytes_reclaimed == sum(f.size_bytes for f in files)
+        assert t.current_files() == ()
+        assert all(not store.exists(f.path) for f in files)
+        snap = t.meta.snapshots[-1]
+        assert snap.operation == "delete"
+        assert snap.summary["removed"] == 6 and snap.summary["added"] == 0
+
+    def test_empty_plan_is_vacuous_success(self):
+        _, _, t, _ = make_table()
+        n_snaps = len(t.meta.snapshots)
+        res = execute_file_drops(t, [])
+        assert res.success and res.files_removed == 0
+        assert len(t.meta.snapshots) == n_snaps   # no commit at all
+
+    def test_single_partition_drop_narrows_scope(self):
+        """All dropped files in one partition -> the delete snapshot
+        carries that scope, so partition-granularity writers elsewhere
+        don't conflict with it."""
+        _, _, t, _ = make_table(granularity="partition")
+        files = add_files(t, 6, parts=("a", "b"))
+        only_a = [f for f in files if f.partition == "a"]
+        res = execute_file_drops(t, only_a)
+        assert res.success
+        assert t.meta.snapshots[-1].summary["scope"] == "a"
+        assert {f.partition for f in t.current_files()} == {"b"}
+
+
+class TestConcurrentWriters:
+    def test_concurrent_delete_not_credited_to_drop(self):
+        """A file a concurrent writer removed in the plan->commit window is
+        neither counted as OUR removal nor physically deleted — its blob
+        belongs to whoever removed the entry."""
+        _, _, t, store = make_table()
+        files = add_files(t, 8)
+        dead = files[0]
+        done = {"hit": False}
+
+        def delete_one(table, _task):
+            if not done["hit"]:
+                done["hit"] = True
+                table.delete_files([dead])
+
+        res = execute_file_drops(t, files, interleave_fn=delete_one)
+        assert res.success
+        assert res.files_removed == len(files) - 1
+        assert res.rows_dropped == sum(f.num_rows for f in files[1:])
+        assert store.exists(dead.path)
+        for f in files[1:]:
+            assert not store.exists(f.path)
+
+    def test_reappended_path_survives_drop(self):
+        """The race the ISSUE names: a writer drops a planned file and
+        re-appends a FRESH entry at the same path between plan and commit.
+        The planned generation is gone, so the drop must not remove the
+        look-alike entry — and must never delete its blob."""
+        clock, _, t, store = make_table()
+        files = add_files(t, 4)
+        target = files[0]
+        reborn = DataFile(target.path, target.size_bytes, 99,
+                          target.partition, created_at=7.5)
+
+        def reref(table, _task):
+            if not getattr(reref, "hit", False):
+                reref.hit = True
+                table.delete_files([target])
+                table.append([reborn])
+
+        res = execute_file_drops(t, files, interleave_fn=reref)
+        assert res.success
+        assert res.files_removed == len(files) - 1
+        assert res.rows_dropped == sum(f.num_rows for f in files[1:])
+        # the re-referenced entry is still in the table, blob intact
+        live = {f.path: f for f in t.current_files()}
+        assert live == {target.path: reborn}
+        assert store.exists(target.path)
+        for f in files[1:]:
+            assert not store.exists(f.path)
+
+    def test_stale_metadata_conflict_retries_and_commits(self):
+        """Table-granularity: >= 2 commits since the txn basis trip the
+        stale-metadata conflict; the drop retries on a fresh basis."""
+        _, _, t, store = make_table()
+        files = add_files(t, 4)
+
+        def two_appends(table, _task):
+            if not getattr(two_appends, "hit", False):
+                two_appends.hit = True
+                add_files(table, 1, parts=("z",))
+                add_files(table, 1, parts=("z",))
+
+        res = execute_file_drops(t, files, interleave_fn=two_appends)
+        assert res.success and res.conflict and res.retries >= 1
+        assert res.files_removed == 4
+        assert all(not store.exists(f.path) for f in files)
+        assert len(t.current_files()) == 2    # the interleaved appends
+
+    def test_everything_gone_is_vacuous_success(self):
+        _, _, t, store = make_table()
+        files = add_files(t, 3)
+
+        def delete_all(table, _task):
+            if not getattr(delete_all, "hit", False):
+                delete_all.hit = True
+                table.delete_files(list(files))
+
+        res = execute_file_drops(t, files, interleave_fn=delete_all)
+        assert res.success
+        assert res.files_removed == 0 and res.rows_dropped == 0
+        # the concurrent deleter owns those blobs, not us
+        assert all(store.exists(f.path) for f in files)
+
+
+# -------------------------------------------------------- fleet integration
+
+def mk_retention_fleet(n_tables=3, n_files=10, budget=0.0, **fleet_kw):
+    clock = SimClock()
+    store = InMemoryStore()
+    catalog = Catalog(store, now_fn=clock.now)
+    catalog.create_namespace("db", total_quota=10_000_000)
+    tables = []
+    for i in range(n_tables):
+        t = catalog.create_table("db", f"t{i:03d}", None)
+        t.now_fn = clock.now
+        add_files(t, n_files, size=1 * MB, parts=(None,), rows=100)
+        tables.append(t)
+    fleet = FleetScheduler(catalog, budget_gbhr=budget, **fleet_kw)
+    return clock, store, catalog, tables, fleet
+
+
+class TestFleetRetention:
+    def test_ttl_drops_are_budget_free(self):
+        """A zero-GBHr fleet budget admits file drops (explicit 0.0 cost)
+        while ordinary compaction can't buy a single rewrite."""
+        clock, store, _, tables, fleet = mk_retention_fleet(budget=0.0)
+        clock.advance(48.0)
+        fleet.submit_retention(RetentionPolicy("ttl", max_age_hours=24.0))
+        rep = fleet.run_cycle()
+        assert rep.n_delete_candidates == len(tables)
+        assert rep.spent_gbhr == 0.0
+        assert rep.files_dropped == len(tables) * 10
+        assert rep.rows_dropped == len(tables) * 10 * 100
+        assert rep.retention_bytes_rewritten == 0
+        for t in tables:
+            assert t.current_files() == ()
+
+    def test_standing_policy_reroutes_each_cycle(self):
+        clock, _, _, tables, fleet = mk_retention_fleet(n_tables=1,
+                                                        budget=0.0)
+        clock.advance(48.0)
+        fleet.submit_retention(RetentionPolicy("ttl", max_age_hours=24.0))
+        rep1 = fleet.run_cycle()
+        assert rep1.rows_dropped > 0
+        # quiet cycle: nothing newly aged, empty route, NOT retired
+        rep2 = fleet.run_cycle()
+        assert rep2.n_delete_candidates == 0
+        assert fleet.retention.has_pending()
+        # new writes age out -> the same policy fires again
+        add_files(tables[0], 5, parts=(None,), rows=100,
+                  created_at=clock.now())
+        clock.advance(48.0)
+        rep3 = fleet.run_cycle()
+        assert rep3.n_delete_candidates == 1 and rep3.files_dropped == 5
+
+    def test_one_shot_predicate_retires_after_commit(self):
+        clock, _, _, tables, fleet = mk_retention_fleet(
+            n_tables=1, budget=50.0,
+            profiles={"steady": ClassProfile("steady", scope="table",
+                                             min_small_files=1_000_000)})
+        tid = tables[0].table_id
+        op = PredicateDelete(
+            "gdpr", row_predicate=lambda rows, task: rows[:, 0] % 2 == 0,
+            est_selectivity=0.5, tables=(tid,))
+        fleet.submit_delete(op)
+        rep1 = fleet.run_cycle()
+        assert rep1.n_delete_candidates == 1
+        assert rep1.rows_dropped > 0
+        assert rep1.retention_bytes_rewritten > 0
+        assert rep1.bytes_reclaimed > 0
+        # fully committed -> retired; next cycle proposes nothing
+        assert not fleet.retention.has_pending()
+        rep2 = fleet.run_cycle()
+        assert rep2.n_delete_candidates == 0
+        tot = fleet.totals()
+        assert tot["rows_dropped"] == rep1.rows_dropped
+        assert tot["retention_bytes_rewritten"] == \
+            rep1.retention_bytes_rewritten
+
+    def test_deferred_delete_stays_pending_and_lands_offpeak(self):
+        """A closed off-peak window defers the delete; it must NOT be
+        retired or lost — it re-enters the pool and commits once the
+        window opens."""
+        window = {"open": False}
+        clock, _, _, tables, fleet = mk_retention_fleet(
+            n_tables=1, budget=0.0,
+            pipeline_factory=lambda p, activity=None, stats=None:
+                build_class_pipeline(
+                    p, activity, stats=stats,
+                    scheduler=Scheduler(
+                        512 * MB,
+                        offpeak_window=lambda: window["open"])))
+        clock.advance(48.0)
+        fleet.submit_retention(RetentionPolicy("ttl", max_age_hours=24.0))
+        rep1 = fleet.run_cycle()
+        assert rep1.n_delete_candidates == 1
+        assert len(rep1.deferred_keys) == 1
+        assert rep1.rows_dropped == 0 and rep1.files_dropped == 0
+        assert len(tables[0].current_files()) == 10
+        window["open"] = True
+        rep2 = fleet.run_cycle()
+        assert rep2.rows_dropped == 1000 and rep2.files_dropped == 10
+        assert tables[0].current_files() == ()
+
+    def test_after_write_cycle_still_sees_quiet_tables(self):
+        """An explicit-tables (after_write) cycle extends its table set
+        with retention targets: a compliance delete can't wait for someone
+        to write to the table."""
+        clock, _, _, tables, fleet = mk_retention_fleet(budget=0.0)
+        clock.advance(48.0)
+        fleet.submit_retention(RetentionPolicy("ttl", max_age_hours=24.0))
+        rep = fleet.run_cycle(tables=[])     # nobody wrote anything
+        assert rep.n_delete_candidates == len(tables)
+        assert rep.rows_dropped == len(tables) * 10 * 100
+
+
+class TestFleetRewriteBitMatch:
+    """Rewrite-deletes THROUGH the fleet: the fused filter+pack path and
+    the two-pass reference must commit identical tables and identical
+    rows_dropped accounting (the tier-2 analogue of
+    test_data_pipeline.TestRewriteDeletes, but driven by a PredicateDelete
+    entering the shared-budget pool)."""
+
+    @staticmethod
+    def _drop_even(rows, task):
+        return rows[:, 0] % 2 == 0          # DROP even-leading rows
+
+    def _run(self, fused):
+        from repro.data import (TokenShardWriter, decode_shard,
+                                merge_shards_fn)
+        clock = SimClock()
+        store = InMemoryStore()
+        cat = Catalog(store, now_fn=clock.now)
+        t = cat.create_table("train", "corpus",
+                             properties={"conflict_granularity": "table"})
+        t.now_fn = clock.now
+        w = TokenShardWriter(t, vocab=997, seed=3)
+        for _ in range(3):
+            w.trickle_append(n_files=6, tokens_per_file=3000)
+        fleet = FleetScheduler(
+            cat, budget_gbhr=100.0,
+            profiles={"steady": ClassProfile("steady", scope="table",
+                                             min_small_files=1_000_000)},
+            pipeline_factory=lambda p, activity=None, stats=None:
+                build_class_pipeline(
+                    p, activity, stats=stats,
+                    scheduler=Scheduler(512 * MB, merge_fn=merge_shards_fn,
+                                        fused_filter=fused)))
+        fleet.submit_delete(PredicateDelete(
+            "purge", row_predicate=self._drop_even,
+            tables=(t.table_id,)))
+        rep = fleet.run_cycle()
+        assert rep.n_delete_candidates == 1
+        toks = sorted((decode_shard(store.get(f.path))
+                       for f in t.current_files()),
+                      key=lambda a: (a.shape[0], tuple(a[:8])))
+        return rep.rows_dropped, toks
+
+    def test_fused_and_reference_commit_identical_tables(self):
+        dropped_fused, toks_fused = self._run(fused=True)
+        dropped_ref, toks_ref = self._run(fused=False)
+        assert dropped_fused == dropped_ref > 0
+        assert len(toks_fused) == len(toks_ref)
+        assert all(np.array_equal(a, b)
+                   for a, b in zip(toks_fused, toks_ref))
+        # the delete held: every surviving 128-token row leads odd
+        for arr in toks_fused:
+            assert (arr.reshape(-1, 128)[:, 0] % 2 == 1).all()
