@@ -90,7 +90,8 @@ METRICS["fleet_retention_bytes_rewritten"] = "lower"
 # hot path: its step time AND its analytic HBM traffic (plan-derived, so
 # deterministic — a plan change that re-reads dropped rows fails even if
 # the stopwatch is noisy).
-for _op in ("compact_pack", "flash_attn", "decode_attn", "rmsnorm"):
+for _op in ("compact_pack", "flash_attn", "decode_attn", "rmsnorm",
+            "expert_a2a"):
     METRICS[f"kernel_{_op}_tuned_s"] = "lower"
 METRICS["kernel_compact_filter_s"] = "lower"
 METRICS["kernel_compact_filter_hbm_bytes"] = "lower"

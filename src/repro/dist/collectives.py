@@ -281,6 +281,27 @@ def stream_slot_int8(cache_leaf: jnp.ndarray, new_slice: jnp.ndarray, slot,
     return jax.lax.dynamic_update_slice(cache_leaf, arrived, tuple(start))
 
 
+def stream_row_int8(cache_leaf: jnp.ndarray, new_row: jnp.ndarray, slot,
+                    *logical_axes: Optional[str], batch_axis: int = 0,
+                    block: int = ACT_BLOCK) -> jnp.ndarray:
+    """Per-row variant of :func:`stream_slot_int8` for state leaves with
+    no sequence axis — the recurrent-family admission primitive (SSM conv
+    and ssm states, mLSTM C/n/m, sLSTM h/c/n/m): quantize ONE request's
+    O(1) state row blockwise along its trailing feature axis, ship the s8
+    chunks + f32 scales (constrained to the slot-row target layout so a
+    cross-layout reshard carries s8, not the raw row), dequantize, and
+    overwrite row ``slot`` along ``batch_axis`` of the running state
+    store. ``slot`` may be a traced scalar, so one compiled admission
+    program serves every slot."""
+    q, scales = quantize_int8_lastdim(new_row, block)
+    q = _shd.constrain(q, *logical_axes)
+    scales = _shd.constrain(scales, *logical_axes[:-1], None)
+    arrived = dequantize_int8_lastdim(q, scales).astype(cache_leaf.dtype)
+    start = [jnp.zeros((), jnp.int32)] * cache_leaf.ndim
+    start[batch_axis] = jnp.asarray(slot, jnp.int32)
+    return jax.lax.dynamic_update_slice(cache_leaf, arrived, tuple(start))
+
+
 class _TraceScope(threading.local):
     """Thread-local trace-time value stack — the shared machinery behind
     the serve-path knobs (activation transport, KV storage). ``None``

@@ -88,6 +88,7 @@ _BUILTIN_OPS = (
     "repro.kernels.flash_attn.ops",
     "repro.kernels.decode_attn.ops",
     "repro.kernels.rmsnorm.ops",
+    "repro.kernels.expert_a2a.ops",
 )
 
 

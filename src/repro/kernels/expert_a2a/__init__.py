@@ -1,0 +1,1 @@
+from repro.kernels.expert_a2a.ops import expert_a2a  # noqa

@@ -1,0 +1,86 @@
+"""Int8 expert all-to-all wire format, registered on the tunable-op registry.
+
+Expert-parallel decode dispatches each token group's capacity buffers
+``(g, e, c, d)`` across the "experts" mesh axis; XLA SPMD inserts the
+all-to-all at the resharding boundary. This op quantizes the dispatch
+payload int8-blockwise along the embedding dim *before* that boundary and
+dequantizes on the expert shard, so the all-to-all moves ~2x fewer bytes
+(int8 values + one f32 scale per block). ``block`` is the quantization
+group along d — a pure wire-format knob the sweep harness tunes; the
+expert compute epilogue is unchanged. The ref path is the bf16 dispatch
+(resharding constraint only, no quantization), so ``tol`` bounds the int8
+round-trip error, not a kernel-vs-ref numerics gap.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.dist import collectives
+from repro.dist.sharding import constrain
+from repro.kernels import api
+
+BLOCK_CANDIDATES = (64, 128, 256, 512)
+DEFAULT_BLOCK = collectives.ACT_BLOCK
+
+# the expert-parallel dispatch layout: (groups, experts, capacity, d_model)
+EP_AXES = ("batch", "experts", None, "act_embed")
+
+
+@partial(jax.jit, static_argnames=("block",))
+def _a2a_int8(xe, *, block):
+    q, scales = collectives.quantize_int8_lastdim(xe, block)
+    # reshard the int8 payload (+ scales), not the bf16 tensor: under the
+    # "ep" preset this boundary is the expert all-to-all
+    q = constrain(q, *EP_AXES)
+    scales = constrain(scales, *EP_AXES[:-1], None)
+    out = collectives.dequantize_int8_lastdim(q, scales)
+    return constrain(out.astype(xe.dtype), *EP_AXES)
+
+
+def _run(point, xe):
+    return _a2a_int8(xe, block=point["block"])
+
+
+def _ref(xe):
+    return constrain(xe, *EP_AXES)
+
+
+def _clamp(point, xe, **kw):
+    return {"block": api.fit_block(point["block"], xe.shape[-1])}
+
+
+def _shape_key(xe, **kw):
+    g, e, c, d = xe.shape
+    return f"g{g}e{e}c{c}d{d}:{xe.dtype.name}"
+
+
+def _example(quick: bool):
+    import jax.numpy as jnp
+    g = 2 if quick else 8
+    key = jax.random.PRNGKey(0)
+    xe = jax.random.normal(key, (g, 4, 16, 256),
+                           jnp.float32).astype(jnp.bfloat16)
+    return (xe,), {}
+
+
+api.register(api.TunableOp(
+    name="expert_a2a",
+    axes={"block": BLOCK_CANDIDATES},
+    default={"block": DEFAULT_BLOCK},
+    run=_run,
+    ref=_ref,
+    clamp=_clamp,
+    shape_key=_shape_key,
+    example=_example,
+    tol=5e-2,
+))
+
+
+def expert_a2a(xe, *, block=None, use_ref=False):
+    """Route the MoE dispatch tensor through the int8 wire format (tuned
+    block from the persisted cache unless ``block`` is passed)."""
+    point = None if block is None else {"block": block}
+    return api.call("expert_a2a", xe, point=point, use_ref=use_ref)

@@ -293,6 +293,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             rep["compile_s"] = round(time.time() - t0, 2)
             _DISAGG_MEMO[dkey] = rep
         rec["disagg"] = rep
+        # every scenario leg this family refused, named explicitly (flag +
+        # uniform capability reason) instead of silently missing from the
+        # roofline keys — the BENCH_roofline artifact carries this list
+        rec["skipped_families"] = [
+            {"family": cfg.family, "flag": flag, "reason": why}
+            for flag, why in sorted(rep.get("skipped", {}).items())]
         for name, cell in rep["cells"].items():
             # flat roofline keys so scripts/bench_diff.py gates each combo
             rec["roofline"]["disagg_collective_s_" + name] = \

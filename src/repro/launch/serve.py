@@ -57,7 +57,7 @@ from repro.configs import get_config, smoke_config
 from repro.dist import collectives
 from repro.dist import sharding as shd
 from repro.launch.mesh import make_local_mesh
-from repro.models import transformer
+from repro.models import registry, transformer
 from repro.train import step as step_lib
 
 
@@ -229,12 +229,9 @@ def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
         # ring buffers alias a padded position's junk slot to an in-window
         # position before the row overwrites it, and SSM/xLSTM recurrent
         # states scan pad tokens in during prefill — per-row masks cannot
-        # undo either. Refuse loudly rather than drift from solo runs.
-        if cfg.attn_window or cfg.family in ("hybrid", "ssm_xlstm"):
-            raise NotImplementedError(
-                f"ragged prompt_lens is unsupported for {cfg.name}: "
-                "windowed (ring-buffer) and recurrent-state families need "
-                "per-row prefill masking; pad to a uniform length instead")
+        # undo either. row_state families serve mixed lengths through
+        # --stream slots (exact-length per-request prefill) instead.
+        registry.require(cfg, "ragged", "ragged prompt_lens")
     if cache_transfer not in collectives.CACHE_TRANSFERS:
         raise ValueError(f"unknown cache_transfer {cache_transfer!r}; "
                          f"expected one of {collectives.CACHE_TRANSFERS}")
@@ -338,86 +335,46 @@ def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
 
 
 def supports_slot_streaming(cfg) -> bool:
-    """Slot admission decodes every request from its own position — the
-    ragged machinery — so windowed (ring-buffer) and recurrent-state
-    families are out (their slot rows cannot be masked/overwritten
-    independently of scan history)."""
-    return not (cfg.attn_window or cfg.family in ("hybrid", "ssm_xlstm"))
+    """Every family serves through slot streaming now that admission is a
+    StateStore row write: attention caches admit as ``[1, total]`` cache
+    slices, ring-buffer and recurrent (``row_state``) families admit
+    their O(1) per-row state as a whole-row overwrite after an
+    exact-length prefill."""
+    return registry.capabilities(cfg).slot_stream
 
 
 def _require_slot_streaming(cfg) -> None:
-    if not supports_slot_streaming(cfg):
-        raise NotImplementedError(
-            f"slot streaming is unsupported for {cfg.name}: windowed "
-            "(ring-buffer) and recurrent-state families need per-row "
-            "prefill masking; use --stream batch instead")
+    registry.require(cfg, "slot_stream", "--stream slots")
 
 
 def make_slot_admit_step(cfg, slots: int, total: int, transfer: str,
                          kv_storage: str,
                          block: int = collectives.ACT_BLOCK):
     """Admission step of continuous slot streaming: returns
-    ``admit(cache, slice, slot) -> cache`` writing one request's grown
-    ``[1, total]`` bf16 cache slice into row ``slot`` of the *running*
-    decode cache (in its resident storage layout). ``slot`` is a traced
-    scalar, so one compiled program serves every slot.
+    ``admit(cache, slice, slot) -> cache`` — a thin wrapper over
+    :meth:`repro.models.registry.StateStore.admit_row`, writing one
+    request's grown ``[1, total]`` bf16 state slice into row ``slot`` of
+    the *running* decode state table (in its resident storage layout).
+    ``slot`` is a traced scalar, so one compiled program serves every
+    slot.
 
     ``transfer`` is the colocated wire form: ``"int8"`` routes each
-    sequence-carrying leaf through ``collectives.stream_slot_int8`` (or
-    ``stream_int8`` when the slice is re-quantized to a resident storage
-    format afterwards), so the compiled slice reshard carries s8 chunks +
-    f32 scales — the program the dryrun parses for per-slot wire bytes.
-    The two-mesh launcher ships the slice with ``make_cache_mover``
-    *before* admission and calls this with ``transfer="bf16"``.
+    sequence-carrying leaf through ``collectives.stream_slot_int8`` and
+    each O(1) row-state leaf through ``collectives.stream_row_int8``, so
+    the compiled slice reshard carries s8 chunks + f32 scales — the
+    program the dryrun parses for per-slot wire bytes. The two-mesh
+    launcher ships the slice with ``make_cache_mover`` *before* admission
+    and calls this with ``transfer="bf16"``.
     """
     if transfer not in collectives.CACHE_TRANSFERS:
         raise ValueError(f"unknown cache_transfer {transfer!r}; "
                          f"expected one of {collectives.CACHE_TRANSFERS}")
     _require_slot_streaming(cfg)
-    slice_axes = transformer.cache_axes(cfg, 1, total)
-    # the slot-table cache's batch dim IS the slot dim: constrain the
-    # written rows through the "slots" logical axis (the serve presets
-    # map it to the batch's mesh axes), pinning the admitted cache to the
-    # slot-row layout instead of letting XLA infer a regather around the
-    # dynamic_update_slice
-    store_axes = {
-        name: tuple("slots" if a == "batch" else a for a in la)
-        for name, la in transformer.cache_axes(
-            cfg, slots, total, kv_storage=kv_storage).items()}
+    store = registry.state_store(cfg, slots, total, kv_storage=kv_storage)
 
     def admit(cache, slc, slot):
-        slot = jnp.asarray(slot, jnp.int32)
-        out = dict(cache)
-        wired = {}
-        for name, leaf in slc.items():
-            la = tuple(slice_axes[name])
-            if transfer == "int8" and "kv_seq" in la:
-                sa = la.index("kv_seq")
-                if kv_storage == "bf16":
-                    # wire + slot-row write fused: the per-slot variant of
-                    # the cache stream
-                    out[name] = shd.constrain(
-                        collectives.stream_slot_int8(
-                            cache[name], leaf, slot, *la, seq_axis=sa,
-                            batch_axis=la.index("batch"), block=block),
-                        *store_axes[name])
-                    continue
-                # quantized storage re-encodes the slice after the wire
-                # roundtrip, so the stream and the write stay separate
-                leaf = collectives.stream_int8(leaf, *la, seq_axis=sa,
-                                               block=block)
-            wired[name] = leaf
-        store = transformer.quantize_cache(wired, kv_storage)
-        for name, upd in store.items():
-            la = store_axes[name]
-            start = [jnp.zeros((), jnp.int32)] * cache[name].ndim
-            start[la.index("slots")] = slot
-            out[name] = shd.constrain(
-                jax.lax.dynamic_update_slice(
-                    cache[name], upd.astype(cache[name].dtype),
-                    tuple(start)),
-                *la)
-        return out
+        return store.admit_row(cache, slc, slot, transfer=transfer,
+                               block=block)
     return admit
 
 
@@ -430,14 +387,15 @@ def _generate_slots(cfg, params, prompts: np.ndarray, max_new: int,
     """Continuous cross-batch disaggregation: prefill streams each
     finished request's cache slice into a RUNNING decode batch.
 
-    The decode side holds a slot table of ``slots`` rows (the cache's
+    The decode side holds a slot table of ``slots`` rows (the state's
     batch dim doubles as the slot dim). Each request is prefilled on its
-    own (``[1, S0]``; per-request positions are the ragged machinery, so
-    its tokens match the whole-batch path bit-for-bit), its grown slice
-    is quantized/shipped/dequantized into a free slot
-    (:func:`make_slot_admit_step`), and the slot decodes from the
-    request's own position while other slots are mid-decode or still
-    empty. A finished slot is freed and reused by the next pending
+    own — ``[1, S0]`` with a per-row last position for dense caches,
+    ``[1, len_i]`` exact-length for ``row_state`` families (ring buffers
+    and recurrent scans must never see pad tokens) — its grown slice is
+    quantized/shipped/dequantized into a free slot
+    (:func:`make_slot_admit_step`, a :class:`~repro.models.registry.\
+StateStore` row write), and the slot decodes from the request's own
+    position while other slots are mid-decode or still empty. A finished slot is freed and reused by the next pending
     request — admission overwrites the entire ``[1, total]`` row, so no
     state can bleed between consecutive occupants. Transfers are
     double-buffered: the next pending request's prefill + wire shipment
@@ -456,10 +414,10 @@ def _generate_slots(cfg, params, prompts: np.ndarray, max_new: int,
     lens = np.asarray(prompt_lens, np.int32) if prompt_lens is not None \
         else np.full((b,), s0, np.int32)
     assert lens.shape == (b,) and (lens >= 1).all() and (lens <= s0).all()
-    # fail before any compile: the same families that refuse ragged
-    # refuse slot streaming (and quantized storage refuses recurrent
-    # caches); make_slot_admit_step re-checks for direct callers
+    # fail before any compile: quantized storage refuses recurrent
+    # caches; make_slot_admit_step re-checks for direct callers
     _require_slot_streaming(cfg)
+    caps = registry.capabilities(cfg)
     if cache_transfer not in collectives.CACHE_TRANSFERS:
         raise ValueError(f"unknown cache_transfer {cache_transfer!r}; "
                          f"expected one of {collectives.CACHE_TRANSFERS}")
@@ -552,9 +510,17 @@ def _generate_slots(cfg, params, prompts: np.ndarray, max_new: int,
         i = next_req
         next_req += 1
         with pre_ctx:
-            logits, c = prefill(params_pre, {
-                "tokens": jnp.asarray(prompts[i:i + 1]),
-                "last_pos": jnp.asarray(lens[i:i + 1] - 1)})
+            if caps.row_state:
+                # ring-buffer / recurrent state: pad tokens must never
+                # enter the per-row state, so prefill the request at its
+                # exact length (one compile per distinct length) instead
+                # of masking a padded batch
+                logits, c = prefill(params_pre, {
+                    "tokens": jnp.asarray(prompts[i:i + 1, :lens[i]])})
+            else:
+                logits, c = prefill(params_pre, {
+                    "tokens": jnp.asarray(prompts[i:i + 1]),
+                    "last_pos": jnp.asarray(lens[i:i + 1] - 1)})
             slc = grow(c)
             tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
         if mover is not None:
@@ -716,10 +682,18 @@ def disagg_decode_report(cfg, batch: int, seq_len: int, mesh,
     slot_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
 
     # whole-batch transfer + per-slot admission wire, per (transfer, block)
-    # — the bf16 arm ignores the block, so it compiles once; families
-    # that refuse slot streaming (windowed/recurrent) keep the
-    # whole-batch metrics and simply omit the slot_stream ones
+    # — the bf16 arm ignores the block, so it compiles once. Every leg a
+    # family refuses is recorded in rep["skipped"] (flag -> the uniform
+    # capability refusal), never silently omitted: the dryrun surfaces the
+    # list in its reports, so a family whose metrics are absent from a
+    # BENCH_roofline artifact names itself there.
+    skipped = {}
     slot_ok = supports_slot_streaming(cfg)
+    if not slot_ok:
+        try:
+            _require_slot_streaming(cfg)
+        except NotImplementedError as e:
+            skipped["--stream slots"] = str(e)
     t_coll, slot_coll = {}, {}
     for t in transfers:
         for blk in (blocks if t == "int8" else blocks[:1]):
@@ -758,8 +732,9 @@ def disagg_decode_report(cfg, batch: int, seq_len: int, mesh,
     for s in storages:
         try:
             fn = step_lib.make_decode_step(cfg, seq_len, "bf16", s)
-        except NotImplementedError:
+        except NotImplementedError as e:
             unsupported.append(s)
+            skipped[f"kv_storage={s!r}"] = str(e)
             continue
         cs_abs = transformer.abstract_cache(cfg, batch, seq_len,
                                             kv_storage=s)
@@ -849,6 +824,7 @@ def disagg_decode_report(cfg, batch: int, seq_len: int, mesh,
                  "evaluations": res.evaluations}
 
     return {"cells": cells, "unsupported_storage": unsupported,
+            "skipped": skipped,
             "slot_stream": slot_stream, "block_sweep": block_sweep,
             "hide_steps": hide_steps, "tuned": tuned}
 

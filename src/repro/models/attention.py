@@ -180,6 +180,16 @@ def gqa_cache_shape(cfg: ModelConfig, batch: int, seq: int):
     return {"k": kv, "v": kv}
 
 
+def gqa_cache_axes():
+    """Logical axes of the GQA ring-buffer cache leaves (this family's
+    contribution to the StateStore protocol; the stack prepends its
+    "layers" axis). ``kv_seq`` marks the slice-admission axis — a
+    windowed (ring) cache still carries it, but slot streaming admits it
+    whole-row after an exact-length prefill."""
+    kv = ("batch", "kv_seq", "kv_heads", "head_dim")
+    return {"k": kv, "v": kv}
+
+
 # ---------------------------------------------------------------------------
 # MLA (latent KV cache)
 # ---------------------------------------------------------------------------
@@ -292,3 +302,10 @@ def mla_apply(cfg: ModelConfig, p, x, mode, cache, pos, cache_len_total):
 def mla_cache_shape(cfg: ModelConfig, batch: int, seq: int):
     return {"latent": (batch, seq, cfg.kv_lora_rank),
             "k_rope": (batch, seq, 1, cfg.rope_head_dim)}
+
+
+def mla_cache_axes():
+    """Logical axes of the MLA latent-cache leaves (StateStore protocol
+    contribution; the stack prepends its "layers" axis)."""
+    return {"latent": ("batch", "kv_seq", "kv_lora"),
+            "k_rope": ("batch", "kv_seq", None, None)}

@@ -19,7 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ModelConfig
+from repro.dist.collectives import current_act_transport
 from repro.dist.sharding import constrain
+from repro.kernels.expert_a2a import expert_a2a
 from repro.models.common import Spec
 
 GROUP = 512  # tokens per dispatch group (upper bound)
@@ -46,9 +48,16 @@ def capacity(cfg: ModelConfig, group: int) -> int:
     return max(1, math.ceil(cfg.capacity_factor * group * cfg.top_k / cfg.n_experts))
 
 
-def moe_apply(cfg: ModelConfig, p, x: jnp.ndarray
+def moe_apply(cfg: ModelConfig, p, x: jnp.ndarray, mode: str = "train"
               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """x: (B, S, d) -> (B, S, d), aux metrics (load-balance loss etc.)."""
+    """x: (B, S, d) -> (B, S, d), aux metrics (load-balance loss etc.).
+
+    Under expert-parallel decode with ``act_transport="int8"``, the token
+    dispatch (the expert all-to-all's payload) routes through the
+    ``expert_a2a`` tunable op — int8 blockwise on the wire, dequantized on
+    the expert shard. Train/prefill keep the bf16 einsum dispatch so the
+    training loss path stays bit-identical.
+    """
     b, s, d = x.shape
     n_tokens = b * s
     m = _group_size(n_tokens)
@@ -81,8 +90,11 @@ def moe_apply(cfg: ModelConfig, p, x: jnp.ndarray
                    onehot * (gate_vals * keep)[..., None], slot_oh),
         "batch", None, "experts", None)
 
-    xe = constrain(jnp.einsum("gmec,gmd->gecd", dispatch.astype(x.dtype), xt),
-                   "batch", "experts", None, "act_embed")   # (g,e,c,d)
+    xe = jnp.einsum("gmec,gmd->gecd", dispatch.astype(x.dtype), xt)  # (g,e,c,d)
+    if mode == "decode" and current_act_transport() == "int8":
+        xe = expert_a2a(xe)
+    else:
+        xe = constrain(xe, "batch", "experts", None, "act_embed")
     h_gate = constrain(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]),
                        "batch", "experts", None, None)
     h_up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])

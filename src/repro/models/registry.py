@@ -1,8 +1,37 @@
-"""Thin public facade over the model zoo."""
+"""Public facade over the model zoo, plus the family-agnostic decode-state
+surface the serve/train paths program against.
+
+Historically every serving feature (ragged batching, slot streaming,
+quantized cache residency) carried its own copy-pasted family check, so the
+scenario matrix was transformer-only in practice. This module replaces
+those checks with two things:
+
+* :func:`capabilities` — one table of what each family's decode state
+  supports, consulted by ``launch/serve.py`` and ``train/step.py`` (the
+  former three refusal sites). :func:`require` raises the uniform
+  refusal naming the flag, the family, and the missing capability.
+* :class:`StateStore` — one protocol over the per-family decode state:
+  ``abstract_state / state_axes / init_state / admit_row / free_row``.
+  The KV ring buffer (``attention.py``), the SSM/mLSTM/sLSTM O(1)
+  recurrent state (``ssm.py``, ``xlstm.py``), and MoE decode state all
+  serve through it — a leaf with a ``kv_seq`` axis admits as a cache
+  slice, a leaf without one (recurrent state, ring bookkeeping) admits
+  as a whole-row overwrite — so slot streaming never special-cases a
+  family again.
+"""
 
 from __future__ import annotations
 
-from repro.configs import ModelConfig, get_config, smoke_config  # noqa: F401
+import dataclasses
+from typing import Any, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FAMILIES, ModelConfig, get_config, smoke_config  # noqa: F401
+from repro.dist import collectives
+from repro.dist import sharding as _shd
+from repro.models import transformer
 from repro.models.transformer import (  # noqa: F401
     abstract_cache,
     abstract_params,
@@ -14,3 +43,257 @@ from repro.models.transformer import (  # noqa: F401
     param_axes,
     param_specs,
 )
+
+
+# ---------------------------------------------------------------------------
+# capabilities
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What one family's decode state supports on the serve path.
+
+    ``ragged``: whole-batch ragged ``prompt_lens`` (per-row masking of a
+    padded batch). ``slot_stream``: per-request slot admission into a
+    running decode batch. ``quantized_storage``: int8/f8-*resident*
+    decode state. ``row_state``: the state is correct only if prefill
+    never sees pad tokens (ring buffers alias junk slots into the
+    window; recurrent scans fold pads into the state) — slot streaming
+    then prefills each request at its exact length and admits the whole
+    row, instead of masking a padded slice.
+    """
+    family: str
+    ragged: bool
+    slot_stream: bool
+    quantized_storage: bool
+    row_state: bool
+    why_ragged: str = ""
+    why_storage: str = ""
+
+
+_WHY_RAGGED_RECURRENT = (
+    "windowed (ring-buffer) and recurrent-state families fold pad tokens "
+    "into per-row state during whole-batch prefill and per-row masks "
+    "cannot undo that; serve them with --stream slots (exact-length "
+    "per-request prefill) or pad to a uniform length")
+_WHY_STORAGE_RECURRENT = (
+    "recurrent state leaves (ssm/xlstm) accumulate quantization error "
+    "across steps; only pure-attention caches are quantized-resident")
+
+_ATTENTION_CAPS = dict(ragged=True, slot_stream=True,
+                       quantized_storage=True, row_state=False)
+_RECURRENT_CAPS = dict(ragged=False, slot_stream=True,
+                       quantized_storage=False, row_state=True,
+                       why_ragged=_WHY_RAGGED_RECURRENT,
+                       why_storage=_WHY_STORAGE_RECURRENT)
+
+_FAMILY_CAPS = {
+    "dense": _ATTENTION_CAPS,
+    "moe": _ATTENTION_CAPS,
+    "mla": _ATTENTION_CAPS,
+    "vlm": _ATTENTION_CAPS,
+    "encoder_audio": _ATTENTION_CAPS,
+    "hybrid": _RECURRENT_CAPS,
+    "ssm_xlstm": _RECURRENT_CAPS,
+}
+
+
+def capabilities(cfg_or_family: Union[ModelConfig, str]) -> Capabilities:
+    """The capability record for a family (or a concrete config — an
+    ``attn_window`` turns any attention family into a ring buffer, which
+    drops whole-batch ragged and makes slot prefill exact-length)."""
+    if isinstance(cfg_or_family, str):
+        family, windowed = cfg_or_family, False
+    else:
+        family, windowed = cfg_or_family.family, bool(cfg_or_family.attn_window)
+    if family not in _FAMILY_CAPS:
+        raise ValueError(f"unknown family {family!r}; "
+                         f"expected one of {tuple(_FAMILY_CAPS)}")
+    base = dict(_FAMILY_CAPS[family])
+    if windowed and base["ragged"]:
+        base.update(ragged=False, row_state=True,
+                    why_ragged=_WHY_RAGGED_RECURRENT)
+    return Capabilities(family=family, **base)
+
+
+def require(cfg: ModelConfig, capability: str, flag: str) -> None:
+    """Raise the uniform refusal if ``cfg``'s family lacks ``capability``.
+
+    ``flag`` names the user-facing knob (``"ragged prompt_lens"``,
+    ``"--stream slots"``, ``"kv_storage='int8'"``); the error names the
+    flag, the family, and the missing capability so every refusal site
+    reads the same.
+    """
+    caps = capabilities(cfg)
+    if getattr(caps, capability):
+        return
+    why = {"ragged": caps.why_ragged,
+           "quantized_storage": caps.why_storage}.get(capability, "")
+    raise NotImplementedError(
+        f"{flag} is unsupported for {cfg.name} (family={caps.family}): "
+        f"missing capability {capability!r}"
+        + (f" — {why}" if why else ""))
+
+
+# ---------------------------------------------------------------------------
+# the StateStore protocol
+# ---------------------------------------------------------------------------
+
+def _rename_batch(axes_tree, name: str):
+    return jax.tree.map(
+        lambda la: tuple(name if a == "batch" else a for a in la),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+@dataclasses.dataclass(frozen=True)
+class StateStore:
+    """One family-agnostic handle on a model's decode-state table.
+
+    ``rows`` is the slot-table size (the state's batch dim doubles as the
+    slot dim), ``total`` the decode horizon (sizes attention caches;
+    O(1) recurrent state ignores it). Attention families store
+    ``[rows, total]`` KV slices; ring-buffer and recurrent families
+    store O(1)-per-row state — a *better* fit for slot streaming: no
+    paging, admission is a whole-row overwrite.
+
+    ``admit_row``/``free_row`` are pure functions over the state pytree
+    (jit them with the store layout as ``out_shardings``); ``slot`` may
+    be a traced scalar so one compiled program serves every slot.
+    """
+    cfg: ModelConfig
+    rows: int
+    total: int
+    kv_storage: str = "bf16"
+
+    def __post_init__(self):
+        if self.kv_storage != "bf16":
+            require(self.cfg, "quantized_storage",
+                    f"kv_storage={self.kv_storage!r}")
+
+    @property
+    def caps(self) -> Capabilities:
+        return capabilities(self.cfg)
+
+    # --- layout -----------------------------------------------------------
+    def abstract_state(self):
+        """ShapeDtypeStructs of the state table in its resident layout."""
+        return transformer.abstract_cache(self.cfg, self.rows, self.total,
+                                          kv_storage=self.kv_storage)
+
+    def state_axes(self):
+        """Logical axes of the state table, batch dim renamed to "slots"
+        (the serve presets map it to the batch's mesh axes)."""
+        return _rename_batch(
+            transformer.cache_axes(self.cfg, self.rows, self.total,
+                                   kv_storage=self.kv_storage), "slots")
+
+    def row_axes(self):
+        """Logical axes of one request's ``[1, total]`` bf16 state slice
+        (the admission payload's layout)."""
+        return transformer.cache_axes(self.cfg, 1, self.total)
+
+    def abstract_row(self):
+        return transformer.abstract_cache(self.cfg, 1, self.total)
+
+    def init_state(self):
+        """Zero-initialized state table (empty rows read as masked/empty
+        until admitted)."""
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.abstract_state())
+
+    # --- row admission ----------------------------------------------------
+    def admit_row(self, state, row, slot, *, transfer: str = "bf16",
+                  block: int = collectives.ACT_BLOCK):
+        """Write one request's ``[1, total]`` bf16 state slice into row
+        ``slot`` of the running state table (in its resident layout).
+
+        Per leaf: a ``kv_seq``-carrying leaf is a cache slice
+        (``transfer="int8"`` streams it seq-blockwise via
+        ``collectives.stream_slot_int8``); a leaf without one is O(1)
+        row state and is overwritten whole (``transfer="int8"`` ships it
+        feature-blockwise via ``collectives.stream_row_int8``). The
+        written rows are constrained to the slot-table layout so XLA
+        never regathers around the dynamic update.
+        """
+        if transfer not in collectives.CACHE_TRANSFERS:
+            raise ValueError(f"unknown cache_transfer {transfer!r}; "
+                             f"expected one of {collectives.CACHE_TRANSFERS}")
+        slot = jnp.asarray(slot, jnp.int32)
+        if self.kv_storage != "bf16":
+            return self._admit_row_quantized(state, row, slot,
+                                             transfer=transfer, block=block)
+        row_axes = self.row_axes()
+        leaves, treedef = jax.tree.flatten(state)
+        row_l = treedef.flatten_up_to(row)
+        raxes_l = [tuple(a) for a in treedef.flatten_up_to(row_axes)]
+        saxes_l = [tuple(a) for a in treedef.flatten_up_to(self.state_axes())]
+        out = []
+        for cur, new, la, sa in zip(leaves, row_l, raxes_l, saxes_l):
+            ba = la.index("batch")
+            if transfer == "int8" and "kv_seq" in la:
+                upd = collectives.stream_slot_int8(
+                    cur, new, slot, *la, seq_axis=la.index("kv_seq"),
+                    batch_axis=ba, block=block)
+            elif transfer == "int8":
+                upd = collectives.stream_row_int8(
+                    cur, new, slot, *la, batch_axis=ba, block=block)
+            else:
+                start = [jnp.zeros((), jnp.int32)] * cur.ndim
+                start[ba] = slot
+                upd = jax.lax.dynamic_update_slice(
+                    cur, new.astype(cur.dtype), tuple(start))
+            out.append(_shd.constrain(upd, *sa))
+        return treedef.unflatten(out)
+
+    def _admit_row_quantized(self, state, row, slot, *, transfer: str,
+                             block: int):
+        """int8/f8-resident admission: wire the bf16 slice, re-encode it
+        into the storage layout (s8 + scale leaves / e4m3), write each
+        storage leaf's row. Flat attention caches only — capabilities
+        refuse quantized storage for recurrent families."""
+        row_axes = self.row_axes()
+        store_axes = self.state_axes()
+        out = dict(state)
+        wired = {}
+        for name, leaf in row.items():
+            la = tuple(row_axes[name])
+            if transfer == "int8" and "kv_seq" in la:
+                leaf = collectives.stream_int8(
+                    leaf, *la, seq_axis=la.index("kv_seq"), block=block)
+            wired[name] = leaf
+        store = transformer.quantize_cache(wired, self.kv_storage)
+        for name, upd in store.items():
+            la = tuple(store_axes[name])
+            start = [jnp.zeros((), jnp.int32)] * state[name].ndim
+            start[la.index("slots")] = slot
+            out[name] = _shd.constrain(
+                jax.lax.dynamic_update_slice(
+                    state[name], upd.astype(state[name].dtype),
+                    tuple(start)),
+                *la)
+        return out
+
+    def free_row(self, state, slot):
+        """Zero row ``slot`` of every leaf. Admission overwrites rows
+        fully, so this is explicit-eviction hygiene (a freed slot reads
+        as empty, not as its previous occupant)."""
+        slot = jnp.asarray(slot, jnp.int32)
+
+        def zero(leaf, la):
+            la = tuple(la)
+            ba = la.index("slots")
+            shape = list(leaf.shape)
+            shape[ba] = 1
+            start = [jnp.zeros((), jnp.int32)] * leaf.ndim
+            start[ba] = slot
+            return _shd.constrain(
+                jax.lax.dynamic_update_slice(
+                    leaf, jnp.zeros(shape, leaf.dtype), tuple(start)),
+                *la)
+        return jax.tree.map(zero, state, self.state_axes())
+
+
+def state_store(cfg: ModelConfig, rows: int, total: int,
+                kv_storage: str = "bf16") -> StateStore:
+    """The StateStore for ``cfg``'s family (validates storage capability)."""
+    return StateStore(cfg=cfg, rows=rows, total=total, kv_storage=kv_storage)

@@ -130,3 +130,11 @@ def ssm_cache_shape(cfg: ModelConfig, batch: int):
     di = cfg.ssm_expand * cfg.d_model
     return {"conv": (batch, cfg.ssm_conv - 1, di),
             "ssm": (batch, di, cfg.ssm_state)}
+
+
+def ssm_cache_axes():
+    """Logical axes of the O(1) recurrent SSM state (StateStore protocol
+    contribution; the stack prepends its "layers" axis). No ``kv_seq``
+    axis — slot streaming admits these leaves as whole-row overwrites."""
+    return {"conv": ("batch", None, "ssm_inner"),
+            "ssm": ("batch", "ssm_inner", "ssm_state")}

@@ -128,20 +128,23 @@ def cache_struct(cfg: ModelConfig, batch: int, seq: int,
     return out
 
 
-_CACHE_AXES = {
-    "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
-    "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
-    "latent": ("layers", "batch", "kv_seq", "kv_lora"),
-    "k_rope": ("layers", "batch", "kv_seq", None, None),
-    "ssm_conv": ("layers", "batch", None, "ssm_inner"),
-    "ssm_ssm": ("layers", "batch", "ssm_inner", "ssm_state"),
-    # per-position quantization scales: same layout as their value leaf,
-    # trailing block axis unsharded
-    "k_scale": ("layers", "batch", "kv_seq", "kv_heads", None),
-    "v_scale": ("layers", "batch", "kv_seq", "kv_heads", None),
-    "latent_scale": ("layers", "batch", "kv_seq", None),
-    "k_rope_scale": ("layers", "batch", "kv_seq", None, None),
-}
+def _flat_cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Assemble the flat-cache leaf axes from the family modules' StateStore
+    contributions (each family declares its per-layer leaf layout; the
+    stack prepends "layers" and derives each quantization-scale leaf as
+    its value leaf's layout with the trailing block axis unsharded)."""
+    if cfg.family == "mla":
+        per = attention.mla_cache_axes()
+    else:
+        per = attention.gqa_cache_axes()
+    out = {k: ("layers",) + v for k, v in per.items()}
+    if cfg.family == "hybrid":
+        for k, v in ssm.ssm_cache_axes().items():
+            out["ssm_" + k] = ("layers",) + v
+    for k in QUANTIZABLE_CACHE_KEYS:
+        if k in out:
+            out[k + "_scale"] = out[k][:-1] + (None,)
+    return out
 
 
 def cache_axes(cfg: ModelConfig, batch: int, seq: int,
@@ -151,11 +154,12 @@ def cache_axes(cfg: ModelConfig, batch: int, seq: int,
         return {"blocks": [
             {k: ("batch",) + (None,) * (len(v) - 1) for k, v in blk.items()}
             for blk in struct["blocks"]]}
-    return {k: _CACHE_AXES[k] for k in struct}
+    axes = _flat_cache_axes(cfg)
+    return {k: axes[k] for k in struct}
 
 
-def _cache_leaf_dtype(name: str, kv_storage: str, dtype):
-    if kv_storage == "bf16" or name not in _CACHE_AXES:
+def _cache_leaf_dtype(name: Optional[str], kv_storage: str, dtype):
+    if kv_storage == "bf16" or name is None:
         return dtype
     if name.endswith("_scale"):
         return jnp.float32
@@ -257,7 +261,7 @@ def _layer_body(cfg: ModelConfig, mode: str, cache_len_total: int,
     if mode != "decode":
         h2 = act_gather(h2, "batch", None, "act_embed")   # sp gather, MLP side
     if cfg.family == "moe":
-        y, aux = moe.moe_apply(cfg, lp["moe"], h2)
+        y, aux = moe.moe_apply(cfg, lp["moe"], h2, mode=mode)
     elif cfg.d_ff > 0:
         y = swiglu(h2, lp["mlp"]["gate"], lp["mlp"]["up"], lp["mlp"]["down"])
     else:

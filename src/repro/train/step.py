@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.configs import ModelConfig
 from repro.configs.shapes import ShapeSpec
 from repro.dist import collectives
+from repro.models import registry as model_registry
 from repro.models import transformer
 from repro.train import optimizer as opt_lib
 
@@ -235,12 +236,9 @@ def make_decode_step(cfg: ModelConfig, cache_len_total: int,
     if kv_storage not in KV_STORAGES:
         raise ValueError(f"unknown kv_storage {kv_storage!r}; "
                          f"expected one of {KV_STORAGES}")
-    if kv_storage != "bf16" and cfg.family in ("hybrid", "ssm_xlstm"):
-        raise NotImplementedError(
-            f"kv_storage={kv_storage!r} is unsupported for {cfg.name}: "
-            "recurrent state leaves (ssm/xlstm) accumulate quantization "
-            "error across steps; only pure-attention caches are "
-            "quantized-resident")
+    if kv_storage != "bf16":
+        model_registry.require(cfg, "quantized_storage",
+                               f"kv_storage={kv_storage!r}")
 
     def decode_step(params, cache, batch):
         with collectives.act_transport_scope(act_transport), \

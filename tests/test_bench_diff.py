@@ -329,11 +329,28 @@ class TestKernelKeys:
     gated lower-is-better."""
 
     def test_kernel_keys_are_gated_lower(self):
-        for op in ("compact_pack", "flash_attn", "decode_attn", "rmsnorm"):
+        for op in ("compact_pack", "flash_attn", "decode_attn", "rmsnorm",
+                   "expert_a2a"):
             assert bench_diff.METRICS[f"kernel_{op}_tuned_s"] == "lower"
         assert bench_diff.METRICS["kernel_compact_filter_s"] == "lower"
         assert bench_diff.METRICS["kernel_compact_filter_hbm_bytes"] \
             == "lower"
+
+    def test_every_registered_op_has_a_gated_tuned_key(self):
+        """New kernels registered on repro.kernels.api must join the
+        bench gate — a registered op whose kernel_<op>_tuned_s key is
+        absent from METRICS would emit ungated trajectory points."""
+        from repro.kernels import api
+        for name in api.ops():
+            assert bench_diff.METRICS.get(f"kernel_{name}_tuned_s") \
+                == "lower", name
+
+    def test_expert_a2a_tuned_regression_fails(self):
+        base = [_kernel_rec(kernel_expert_a2a_tuned_s=0.001)]
+        cur = [_kernel_rec(kernel_expert_a2a_tuned_s=0.0013)]  # +30%
+        res = bench_diff.diff_trajectories(cur, base)
+        assert [r["metric"] for r in res["regressions"]] \
+            == ["kernel_expert_a2a_tuned_s"]
 
     def test_tuned_regression_fails_default_drift_does_not(self):
         """The serving path reads the tuned point, so only the tuned

@@ -49,7 +49,7 @@ class TestRegistry:
     def test_builtin_ops_registered(self):
         names = set(api.ops())
         assert {"compact_pack", "flash_attn", "decode_attn",
-                "rmsnorm"} <= names
+                "rmsnorm", "expert_a2a"} <= names
 
     def test_register_rejects_default_outside_candidates(self):
         bad = api.TunableOp(
@@ -75,7 +75,8 @@ class TestGridBitMatch:
     is a correct implementation — the tuner can only trade speed."""
 
     @pytest.mark.parametrize("name", ["compact_pack", "flash_attn",
-                                      "decode_attn", "rmsnorm"])
+                                      "decode_attn", "rmsnorm",
+                                      "expert_a2a"])
     def test_every_grid_point_matches_ref(self, name):
         op = api.get_op(name)
         args, kwargs = op.example(True)
@@ -194,6 +195,22 @@ class TestTuneHarness:
         a = np.asarray(api.call("compact_pack", *args, **kwargs))
         b = np.asarray(api.call("compact_pack", *args, **kwargs))
         assert np.array_equal(a, b)
+
+    def test_expert_a2a_sweep_then_cache_hit(self, tuned_dir):
+        """The expert all-to-all inherits the sweep harness like every
+        registered op: first sweep evaluates the (clamped, deduped) block
+        grid and persists, the second is a pure cache hit."""
+        first = tune.tune_op("expert_a2a", quick=True, iters=1)
+        assert not first.cache_hit
+        op = api.get_op("expert_a2a")
+        args, kwargs = op.example(True)
+        assert first.evaluations >= len(
+            api.clamped_axes(op, *args, **kwargs)["block"])
+        second = tune.tune_op("expert_a2a", quick=True, iters=1)
+        assert second.cache_hit
+        assert second.evaluations == 0
+        assert second.point == first.point
+        assert api.resolve_point(op, *args, **kwargs) == first.point
 
 
 class TestFusedFilterPack:

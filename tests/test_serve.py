@@ -338,14 +338,36 @@ class TestSlotStreaming:
         assert (one == two).all()
 
     @pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-125m"])
-    def test_slot_stream_refused_for_ring_and_recurrent(self, arch):
-        """Slot admission decodes every request from its own position —
-        the ragged machinery — so the same families refuse."""
+    def test_slot_stream_serves_ring_and_recurrent(self, arch):
+        """row_state families (ring-buffer hybrid, recurrent xLSTM) serve
+        through slot streaming now that admission is a StateStore
+        whole-row overwrite after an exact-length prefill: uniform-length
+        slot tokens must match the whole-batch path bit-for-bit, even
+        when a one-slot table forces reuse."""
         cfg = smoke_config(arch)
         params = transformer.init_params(cfg, jax.random.PRNGKey(2))
-        with pytest.raises(NotImplementedError, match="slot"):
-            generate(cfg, params, _prompts(cfg, 2, 10), max_new=2,
-                     stream="slots")
+        prompts = _prompts(cfg, 3, 10, seed=41)
+        batch = generate(cfg, params, prompts, max_new=4)
+        for n_slots in (0, 1):
+            slot = generate(cfg, params, prompts, max_new=4,
+                            stream="slots", slots=n_slots)
+            assert (batch == slot).all(), (n_slots, batch, slot)
+
+    @pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-125m"])
+    def test_slot_stream_ragged_matches_solo_runs(self, arch):
+        """Mixed lengths for row_state families: whole-batch ragged stays
+        refused (pads would enter the scan state), but slot streaming
+        prefills each request at its exact length — every row must match
+        a solo run of its unpadded prompt."""
+        cfg = smoke_config(arch)
+        params = transformer.init_params(cfg, jax.random.PRNGKey(2))
+        prompts = _prompts(cfg, 3, 10, seed=43)
+        lens = np.array([6, 10, 8], np.int32)
+        slot = generate(cfg, params, prompts, max_new=4, prompt_lens=lens,
+                        stream="slots", slots=2)
+        for i, ln in enumerate(lens):
+            solo = generate(cfg, params, prompts[i:i + 1, :ln], max_new=4)
+            assert (slot[i] == solo[0]).all(), (i, slot[i], solo[0])
 
     def test_unknown_stream_refused(self, dense):
         cfg, params = dense
@@ -381,3 +403,94 @@ class TestDisaggActTransport:
                        mesh=pre, decode_mesh=dec, act_transport="int8",
                        decode_rules=shd.PRESETS["serve_sp"])
         assert seen["act"] == "int8"
+
+
+class TestStateStoreBleed:
+    """Cross-request bleed, at the state level: admitting request B into
+    a slot previously held by A must leave the state table bit-identical
+    to admitting B into a never-used table — no element of A's recurrent
+    state survives, with or without an explicit free_row between."""
+
+    @pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-125m"])
+    def test_readmission_leaves_no_trace_of_previous_occupant(self, arch):
+        from repro.models import registry
+        cfg = smoke_config(arch)
+        params = transformer.init_params(cfg, jax.random.PRNGKey(2))
+        store = registry.state_store(cfg, rows=2, total=16)
+        prefill = jax.jit(step_lib.make_prefill_step(cfg))
+
+        def row_state(seed):
+            _, c = prefill(params,
+                           {"tokens": jnp.asarray(_prompts(cfg, 1, 8,
+                                                           seed=seed))})
+            return grow_cache(c, store.abstract_row())
+
+        row_a, row_b = row_state(51), row_state(52)
+
+        def leaves_equal(x, y):
+            return all(np.array_equal(np.asarray(l1), np.asarray(l2))
+                       for l1, l2 in zip(jax.tree.leaves(x),
+                                         jax.tree.leaves(y)))
+
+        fresh_b = store.admit_row(store.init_state(), row_b, 0)
+        # overwrite-on-admit: A -> B directly
+        state = store.admit_row(store.init_state(), row_a, 0)
+        assert not leaves_equal(state, fresh_b)       # A is really there
+        assert leaves_equal(store.admit_row(state, row_b, 0), fresh_b)
+        # explicit eviction: A -> free -> B
+        freed = store.free_row(state, 0)
+        assert leaves_equal(freed, store.init_state())
+        assert leaves_equal(store.admit_row(freed, row_b, 0), fresh_b)
+
+    @pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-125m"])
+    def test_reused_slot_tokens_match_solo_run(self, arch):
+        """End to end: a one-slot table serializes requests through the
+        same state row; each request's greedy tokens must still match a
+        solo run of its prompt bit-for-bit."""
+        cfg = smoke_config(arch)
+        params = transformer.init_params(cfg, jax.random.PRNGKey(2))
+        prompts = _prompts(cfg, 3, 9, seed=53)
+        out = generate(cfg, params, prompts, max_new=3, stream="slots",
+                       slots=1)
+        for i in range(3):
+            solo = generate(cfg, params, prompts[i:i + 1], max_new=3)
+            assert (out[i] == solo[0]).all(), (i, out[i], solo[0])
+
+
+class TestExpertParallelDecode:
+    def test_ep_decode_routes_dispatch_through_expert_a2a(self, monkeypatch):
+        """Under the ep preset with act_transport="int8", MoE decode must
+        dispatch its expert all-to-all payload through the expert_a2a
+        tunable op (train/prefill keep the bf16 einsum dispatch)."""
+        from repro.dist import sharding as shd
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import moe as moe_lib
+
+        calls = []
+        real = moe_lib.expert_a2a
+        monkeypatch.setattr(moe_lib, "expert_a2a",
+                            lambda xe, **kw: calls.append(xe.shape)
+                            or real(xe, **kw))
+        cfg = smoke_config("qwen3-moe-30b-a3b")
+        params = transformer.init_params(cfg, jax.random.PRNGKey(3))
+        prompts = _prompts(cfg, 2, 8, seed=59)
+        mesh = make_local_mesh()
+        out = generate(cfg, params, prompts, max_new=3, mesh=mesh,
+                       rules=shd.PRESETS["ep"], act_transport="int8")
+        assert calls, "decode never dispatched through expert_a2a"
+        assert all(len(s) == 4 for s in calls)   # (g, e, c, d) payloads
+        assert out.shape == (2, 3)
+        assert ((out >= 0) & (out < cfg.vocab)).all()
+
+    def test_bf16_transport_keeps_einsum_dispatch(self, monkeypatch):
+        """No int8 transport => no quantized wire: the op must not fire,
+        and tokens are bit-identical to the no-mesh path."""
+        from repro.models import moe as moe_lib
+        calls = []
+        monkeypatch.setattr(moe_lib, "expert_a2a",
+                            lambda xe, **kw: calls.append(1) or xe)
+        cfg = smoke_config("qwen3-moe-30b-a3b")
+        params = transformer.init_params(cfg, jax.random.PRNGKey(3))
+        prompts = _prompts(cfg, 2, 8, seed=59)
+        generate(cfg, params, prompts, max_new=3)
+        assert not calls
