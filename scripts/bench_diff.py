@@ -90,11 +90,25 @@ METRICS["fleet_retention_bytes_rewritten"] = "lower"
 # hot path: its step time AND its analytic HBM traffic (plan-derived, so
 # deterministic — a plan change that re-reads dropped rows fails even if
 # the stopwatch is noisy).
-for _op in ("compact_pack", "flash_attn", "decode_attn", "rmsnorm",
-            "expert_a2a"):
+for _op in ("compact_pack", "flash_attn", "decode_attn", "paged_attn",
+            "rmsnorm", "expert_a2a"):
     METRICS[f"kernel_{_op}_tuned_s"] = "lower"
 METRICS["kernel_compact_filter_s"] = "lower"
 METRICS["kernel_compact_filter_hbm_bytes"] = "lower"
+
+# Fan-in arbitration keys (decode cells, serve.fanin_report — a
+# deterministic simulation driving the real AdmissionArbiter, so drift is
+# a queue-discipline change, not noise). fanin_admission_wait_s is the
+# mean per-admission latency (queue wait + unhidden transfer);
+# fanin_evictions counts preemptions the policy performed (each costs a
+# re-prefill of the extended prompt, so an arbiter change that thrashes
+# the slot table must fail); paged_hbm_bytes_per_slot is the paged slot
+# cache's live-page resident rent — the saving over the dense
+# pad-to-horizon layout the paged table exists to buy, gated so a paging
+# change cannot silently give it back.
+for _m in ("fanin_admission_wait_s", "fanin_evictions",
+           "paged_hbm_bytes_per_slot"):
+    METRICS[_m] = "lower"
 
 DEFAULT_THRESHOLD = 0.15
 

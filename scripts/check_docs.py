@@ -1,25 +1,52 @@
 #!/usr/bin/env python
 """Docs lint, run in tier-1 CI (scripts/ci.sh).
 
-Two checks keep the documentation spine from rotting:
+Four checks keep the documentation spine from rotting:
 
   1. every package under ``src/repro/`` (a directory with ``__init__.py``)
      has a ``README.md``;
-  2. every RELATIVE markdown link in ``README.md`` and any
-     ``src/**/README.md`` resolves to an existing file or directory
-     (external http(s)/mailto links and pure #anchors are not checked).
+  2. every RELATIVE markdown link in ``README.md``, any
+     ``src/**/README.md``, and any ``docs/*.md`` resolves to an existing
+     file or directory (external http(s)/mailto links and pure #anchors
+     are not checked);
+  3. every argparse flag of the serving launchers
+     (``launch/serve.py``, ``launch/dryrun.py``) is documented in the
+     serving operator's guide (``docs/serving.md``) — a new flag cannot
+     land undocumented;
+  4. every gated ``scripts/bench_diff.py`` metric key appears in a README
+     or ``docs/*.md`` — either literally or via a ``<placeholder>``
+     template (``kernel_<op>_tuned_s`` covers every concrete op key), so
+     the "reading the nightly artifacts" docs can never silently fall
+     behind the gate.
+
+The flag check reads source text with a regex (never imports the
+launchers — they pull in jax); the metric check imports ``bench_diff``
+(stdlib-only) for its ``METRICS`` dict. Both checks are skipped in trees
+that lack the corresponding sources, so the unit tests can build minimal
+repos.
 
 Exit 0 when clean; exit 1 with one line per problem.
 """
 
 from __future__ import annotations
 
+import importlib.util
 import re
 import sys
 from pathlib import Path
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+# the first string literal of an add_argument call (flags only)
+FLAG_RE = re.compile(r"add_argument\(\s*[\"'](--[A-Za-z0-9-]+)")
+# launcher sources whose flags the operator's guide must cover
+FLAG_SOURCES = ("src/repro/launch/serve.py", "src/repro/launch/dryrun.py")
+SERVING_DOC = "docs/serving.md"
+
+# a metric-key template in docs: text with <placeholder> segments, e.g.
+# kernel_<op>_tuned_s or disagg_collective_s_<transfer>x<storage>
+TEMPLATE_RE = re.compile(r"[a-z0-9_]*(?:<[a-z_]+>[a-z0-9_]*)+")
 
 
 def repo_root() -> Path:
@@ -42,6 +69,8 @@ def doc_files(root: Path) -> list[Path]:
     if (root / "README.md").exists():
         docs.append(root / "README.md")
     docs += sorted((root / "src").rglob("README.md"))
+    if (root / "docs").is_dir():
+        docs += sorted((root / "docs").glob("*.md"))
     return docs
 
 
@@ -63,17 +92,80 @@ def broken_links(root: Path) -> list[str]:
     return problems
 
 
+def extract_flags(path: Path) -> list[str]:
+    """Argparse flags of one launcher, from source text (no import —
+    the launchers pull in jax)."""
+    return sorted(set(FLAG_RE.findall(path.read_text(encoding="utf-8"))))
+
+
+def missing_flag_docs(root: Path) -> list[str]:
+    sources = [s for s in FLAG_SOURCES if (root / s).exists()]
+    if not sources:
+        return []
+    doc = root / SERVING_DOC
+    if not doc.exists():
+        return [f"{SERVING_DOC} is missing (the serving operator's guide "
+                f"must document every flag of {', '.join(sources)})"]
+    text = doc.read_text(encoding="utf-8")
+    problems = []
+    for src in sources:
+        for flag in extract_flags(root / src):
+            if flag not in text:
+                problems.append(f"{SERVING_DOC}: flag {flag} of {src} "
+                                f"is undocumented")
+    return problems
+
+
+def gated_metrics(root: Path) -> dict:
+    """The METRICS dict of scripts/bench_diff.py ({} when absent)."""
+    path = root / "scripts" / "bench_diff.py"
+    if not path.exists():
+        return {}
+    spec = importlib.util.spec_from_file_location("_bench_diff_docs", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return dict(mod.METRICS)
+
+
+def _template_to_regex(template: str) -> re.Pattern:
+    parts = re.split(r"<[a-z_]+>", template)
+    return re.compile("[a-z0-9_]+".join(re.escape(p) for p in parts) + r"\Z")
+
+
+def missing_metric_docs(root: Path) -> list[str]:
+    metrics = gated_metrics(root)
+    if not metrics:
+        return []
+    corpus = "\n".join(d.read_text(encoding="utf-8")
+                       for d in doc_files(root))
+    templates = [_template_to_regex(t)
+                 for t in set(TEMPLATE_RE.findall(corpus)) if "<" in t]
+    problems = []
+    for key in sorted(metrics):
+        if key in corpus or any(t.match(key) for t in templates):
+            continue
+        problems.append(
+            f"gated bench_diff metric {key!r} is documented nowhere: add "
+            f"it to a README or docs/*.md (templates like "
+            f"kernel_<op>_tuned_s count)")
+    return problems
+
+
 def main() -> int:
     root = repo_root()
-    problems = missing_readmes(root) + broken_links(root)
+    problems = (missing_readmes(root) + broken_links(root)
+                + missing_flag_docs(root) + missing_metric_docs(root))
     for p in problems:
         print(f"[check-docs] {p}")
     if problems:
         print(f"[check-docs] FAIL: {len(problems)} problem(s)")
         return 1
     n_docs = len(doc_files(root))
+    n_flags = sum(len(extract_flags(root / s)) for s in FLAG_SOURCES
+                  if (root / s).exists())
     print(f"[check-docs] OK: {len(find_packages(root))} packages, "
-          f"{n_docs} README(s), all links resolve")
+          f"{n_docs} doc file(s), all links resolve, {n_flags} launcher "
+          f"flags and {len(gated_metrics(root))} gated metrics documented")
     return 0
 
 

@@ -77,7 +77,7 @@ _SERVE_SP_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
     (name, ()) if name == "embed" else (name, targets)
     for name, targets in _WEIGHT_RULES) \
     + (("seq_res", ("model",)), ("kv_seq", ("model",)),
-       ("slots", ("pod", "data")))
+       ("slots", ("pod", "data")), ("pages", ("pod", "data")))
 
 # Disaggregated decode: the batch-heavy layout for a dedicated decode mesh.
 # serve_sp minus the sequence shards — the KV cache stays fully resident
@@ -98,7 +98,8 @@ _SERVE_SP_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
 # admission touches exactly the slot row's home devices.
 _SERVE_DECODE_RULES: Rules = (("batch", ("pod", "data")),) + tuple(
     (name, ()) if name in ("embed", "kv_heads", "kv_lora") else (name, targets)
-    for name, targets in _WEIGHT_RULES) + (("slots", ("pod", "data")),)
+    for name, targets in _WEIGHT_RULES) \
+    + (("slots", ("pod", "data")), ("pages", ("pod", "data")))
 
 # Named rule presets consumed by ``repro.launch.dryrun --preset``.
 PRESETS: Dict[str, Rules] = {

@@ -87,6 +87,7 @@ _BUILTIN_OPS = (
     "repro.kernels.compact_pack.ops",
     "repro.kernels.flash_attn.ops",
     "repro.kernels.decode_attn.ops",
+    "repro.kernels.paged_attn.ops",
     "repro.kernels.rmsnorm.ops",
     "repro.kernels.expert_a2a.ops",
 )

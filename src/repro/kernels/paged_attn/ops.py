@@ -1,0 +1,101 @@
+"""Paged decode-attention wrapper, registered on the tunable-op registry.
+
+``page`` is the paged slot cache's granularity — the axis
+``tune_design`` sweeps through ``repro.kernels.tune`` like any other
+registered op. The op pages the dense K/V into a (reversed-order) pool,
+reads them back through the page table, and runs the flash-decode
+kernel, so the sweep prices exactly the gather the paged serve path
+pays per step. Paging is pure data movement (the roundtrip is the
+identity on every live position), so ``page`` is an *exact* axis: every
+candidate produces bit-identical output, and the serve path
+(``launch/serve.py --paged --page-size 0``) reads its page size from the
+tuned cache via :func:`tuned_page_size` without ever recompiling a
+sweep.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import api
+from repro.kernels.decode_attn.ops import decode_attention
+from repro.kernels.paged_attn.ref import gather_pages, pack_pages
+
+PAGE_CANDIDATES = (64, 128, 256, 512)
+DEFAULT_PAGE = 256
+
+
+@partial(jax.jit, static_argnames=("page",))
+def _repage(x, *, page):
+    pool, pt = pack_pages(x, page)
+    return gather_pages(pool, pt)
+
+
+def _run(point, q, k, v, lengths):
+    page = point["page"]
+    return decode_attention(q, _repage(k, page=page),
+                            _repage(v, page=page), lengths)
+
+
+def _ref(q, k, v, lengths):
+    from repro.kernels.decode_attn.ref import decode_attention_ref
+    return decode_attention_ref(q, k, v, lengths)
+
+
+def _clamp(point, q, k, v, lengths, **kw):
+    return {"page": api.fit_block(point["page"], k.shape[1])}
+
+
+def _shape_key(q, k, v, lengths, **kw):
+    b, h, d = q.shape
+    return f"b{b}h{h}kv{k.shape[2]}s{k.shape[1]}d{d}:{q.dtype.name}"
+
+
+def _example(quick: bool):
+    s = 512 if quick else 2048
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (4, 8, 64), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(key, (4, s, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(key, (4, s, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    lens = jnp.asarray([s, s // 2, s // 4, 100], jnp.int32)
+    return (q, k, v, lens), {}
+
+
+api.register(api.TunableOp(
+    name="paged_attn",
+    axes={"page": PAGE_CANDIDATES},
+    default={"page": DEFAULT_PAGE},
+    run=_run,
+    ref=_ref,
+    clamp=_clamp,
+    shape_key=_shape_key,
+    example=_example,
+    exact_axes=frozenset({"page"}),
+    tol=5e-2,
+))
+
+
+def paged_attention(q, k, v, lengths, *, page=None, use_ref=False):
+    """Decode attention over paged K/V (dense inputs, paged internally at
+    ``page``; tuned > default when None)."""
+    point = None if page is None else {"page": page}
+    return api.call("paged_attn", q, k, v, lengths, point=point,
+                    use_ref=use_ref)
+
+
+def tuned_page_size(total: int, *, batch: int = 1, heads: int = 8,
+                    kv_heads: int = 2, head_dim: int = 64,
+                    dtype=jnp.bfloat16) -> int:
+    """The page size serving should use for a ``total``-position cache:
+    the persisted tuned point for the matching sweep cell when one
+    exists, the registry default otherwise — clamped to divide ``total``
+    (divisor-safe, like every tuned block)."""
+    op = api.get_op("paged_attn")
+    q = jax.ShapeDtypeStruct((batch, heads, head_dim), dtype)
+    kv = jax.ShapeDtypeStruct((batch, total, kv_heads, head_dim), dtype)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    point = api.resolve_point(op, q, kv, kv, lens)
+    return api.fit_block(point["page"], total)

@@ -113,7 +113,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                act_transport: str = "bf16",
                cache_transfers: tuple = ("bf16", "int8"),
                kv_storages: tuple = ("bf16", "int8"),
-               stream_blocks: tuple = (256,)) -> Dict[str, Any]:
+               stream_blocks: tuple = (256,),
+               workers: int = 2,
+               page_size: int = 0) -> Dict[str, Any]:
     import dataclasses as _dc
     cfg = get_config(arch)
     if remat_block is not None:
@@ -325,6 +327,27 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         if rep["tuned"] is not None:
             rec["roofline"]["disagg_tuned_collective_s"] = \
                 rep["tuned"]["collective_s"]
+        # fan-in arbitration roofline: drive the real AdmissionArbiter
+        # through a deterministic contended trace priced with this cell's
+        # measured decode-step and per-slot transfer costs; paged-vs-dense
+        # slot HBM rent rides along for families with the paged capability
+        cell0 = next(iter(rep["cells"].values()), None)
+        ss0 = next(iter(rep["slot_stream"].values()), None)
+        frep = serve_lib.fanin_report(
+            cfg, shape.global_batch, shape.seq_len,
+            workers=workers, page=page_size,
+            decode_step_s=cell0["decode_step_s"] if cell0 else 0.0,
+            transfer_s=ss0["transfer_s"] if ss0 else 0.0)
+        rec["fanin"] = frep
+        rec["roofline"]["fanin_admission_wait_s"] = \
+            frep["fanin_admission_wait_s"]
+        rec["roofline"]["fanin_evictions"] = float(frep["fanin_evictions"])
+        if "paged_hbm_bytes_per_slot" in frep:
+            rec["roofline"]["paged_hbm_bytes_per_slot"] = \
+                frep["paged_hbm_bytes_per_slot"]
+        rec["skipped_families"] += [
+            {"family": cfg.family, "flag": flag, "reason": why}
+            for flag, why in sorted(frep.get("skipped", {}).items())]
     rec["status"] = "ok"
     return rec
 
@@ -368,6 +391,13 @@ def main() -> None:
                     help="comma list of cache-stream quantization block "
                          "sizes (positions per s8 chunk) to sweep; the "
                          "first is the one the combo cells report")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="prefill workers for the decode cells' fan-in "
+                         "arbitration roofline (serve.fanin_report)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="page size for the decode cells' paged-vs-dense "
+                         "slot HBM comparison (0 = the tuned paged_attn "
+                         "point, capped to 8 pages per row)")
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--remat-block", type=int, default=None)
     ap.add_argument("--capacity-factor", type=float, default=None)
@@ -457,7 +487,9 @@ def run_one(args, arch: str, shape: str, mp: bool, preset: str,
                          act_transport="bf16" if is_train else transport,
                          cache_transfers=args.cache_transfers,
                          kv_storages=args.kv_storages,
-                         stream_blocks=args.stream_blocks)
+                         stream_blocks=args.stream_blocks,
+                         workers=args.workers,
+                         page_size=args.page_size)
     except Exception as e:  # a failure here is a bug in the system
         rec = {"arch": arch, "shape": shape,
                "mesh": "2x16x16" if mp else "16x16",

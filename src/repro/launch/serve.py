@@ -40,6 +40,28 @@ Continuous batching: requests at different positions share one decode step
 (``prompt_lens`` gives per-row lengths; positions/masks are per-row, so
 padded prompt slots are never attended — same semantics the decode_attn
 Pallas kernel implements on TPU).
+
+``--workers N`` (or ``--paged``) routes serving through the *fan-in*
+engine (:func:`_generate_fanin`): N independent prefill workers — each
+running the same double-buffered mover — feed ONE decode slot table
+through :class:`repro.dist.fanin.AdmissionArbiter` (FIFO with priority
+classes, aging + hard promotion mirroring the fleet scheduler's
+starvation bound, per-worker in-flight accounting, and a deterministic
+tie-break: the engine blocks on the arbiter's chosen shipment instead of
+racing worker completion order, so admissions replay identically under
+permuted arrival). When the table is full, ``--evict`` preempts a
+justified victim — the evicted request requeues with its emitted tokens
+appended to its prompt and is re-prefilled on readmission (recompute
+preemption; greedy tokens bit-match an uncontended run). ``--paged``
+swaps the dense pad-to-horizon slot table for a *paged* one
+(:class:`repro.models.registry.PagedStateStore`): rows are lists of
+fixed-size pages in a shared pool with a per-slot page table, admission
+ships only live pages, pages allocate on demand as a row decodes past a
+page boundary, and the decode step runs *unchanged* on a dense view
+gathered through the table (bit parity with the unpaged path). The page
+size is a tunable axis on the kernel registry (``paged_attn``), swept by
+``tune_design`` like every other kernel block. See docs/serving.md for
+the full operator's guide.
 """
 
 from __future__ import annotations
@@ -47,6 +69,7 @@ from __future__ import annotations
 import argparse
 import contextlib
 import time
+from collections import deque
 from typing import Optional
 
 import jax
@@ -54,7 +77,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.dist import collectives
+from repro.dist import collectives, fanin
 from repro.dist import sharding as shd
 from repro.launch.mesh import make_local_mesh
 from repro.models import registry, transformer
@@ -77,6 +100,25 @@ def grow_cache(cache, target):
         return jnp.pad(c, pad).astype(tgt.dtype)
 
     return jax.tree.map(grow, cache, target)
+
+
+def fit_cache(cache, target):
+    """:func:`grow_cache` that can also *shrink*: every leaf is sliced to
+    the target extent before padding. The fan-in engine needs both
+    directions — a fresh paged admission ships ``ceil(len / page)`` pages,
+    which may be fewer positions than the ``[1, S0]`` prefill buffer
+    (the dropped tail is pad junk beyond the request's live length, which
+    per-row position masks never attend), while a readmitted request's
+    exact-length prefill pads up to the next page boundary.
+    """
+    def fit(c, tgt):
+        if c.shape == tgt.shape:
+            return c.astype(tgt.dtype)
+        c = c[tuple(slice(0, min(s, t)) for s, t in zip(c.shape, tgt.shape))]
+        pad = [(0, t - s) for s, t in zip(c.shape, tgt.shape)]
+        return jnp.pad(c, pad).astype(tgt.dtype)
+
+    return jax.tree.map(fit, cache, target)
 
 
 def make_cache_transfer_step(cfg, batch: int, total: int, mode: str,
@@ -175,13 +217,66 @@ def make_cache_mover(cfg, batch: int, total: int, dec_mesh, dec_rules,
 STREAMS = ("batch", "slots")
 
 
+def _default_page(base: int) -> int:
+    """Page size when ``--page-size 0``: the tuned ``paged_attn`` registry
+    point, capped so a row spans at least 8 pages — a near-single-page
+    row degenerates to the dense pad-to-horizon layout and buys no HBM
+    back, so small smoke horizons get proportionally small pages."""
+    from repro.kernels.paged_attn import tuned_page_size
+    return max(1, min(tuned_page_size(base), -(-base // 8)))
+
+
+def _check_prompt_lens(cfg, lens: np.ndarray, b: int, s0: int,
+                       max_new: int, total: int, paged: bool) -> None:
+    """Loud validation of per-request lengths against the prompt buffer
+    and the decode horizon.
+
+    Bugfix: these used to be bare ``assert``s — stripped under ``-O``,
+    and even when they fired they named nothing. A request longer than
+    the decode horizon would silently truncate (its tail positions
+    written past the cache end are dropped by the update's clamp) and
+    serve wrong tokens without a word. Refuse loudly instead, in the
+    same uniform style as ``registry.require``; under ``--paged`` the
+    horizon cap does not apply (pages allocate on demand), so the same
+    request admits.
+    """
+    lens = np.asarray(lens)
+    if lens.shape != (b,):
+        raise ValueError(f"prompt_lens shape {tuple(lens.shape)} does not "
+                         f"match the batch ({b},)")
+    if (lens < 1).any():
+        raise ValueError("every request needs at least one prompt token; "
+                         f"got prompt_lens={lens.tolist()}")
+    over = np.nonzero(lens > s0)[0]
+    if over.size:
+        i = int(over[0])
+        raise ValueError(
+            f"request {i} claims {int(lens[i])} prompt tokens but the "
+            f"prompt buffer holds only {s0}: the overflow was already "
+            f"lost — refusing to serve a silently truncated prompt")
+    if paged:
+        return
+    over = np.nonzero(lens + max_new > total)[0]
+    if over.size:
+        i = int(over[0])
+        raise ValueError(
+            f"request {i} needs {int(lens[i]) + max_new} positions "
+            f"(prompt {int(lens[i])} + {max_new} new) but the decode "
+            f"horizon is {total} for {cfg.name}: refusing to truncate — "
+            f"raise --horizon, or serve --paged (pages allocate on "
+            f"demand, so long requests admit instead of truncating)")
+
+
 def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
              temperature: float = 0.0, seed: int = 0,
              prompt_lens: Optional[np.ndarray] = None,
              mesh=None, rules=None, act_transport: str = "bf16",
              decode_mesh=None, decode_rules=None,
              cache_transfer: str = "bf16", kv_storage: str = "bf16",
-             stream: str = "batch", slots: int = 0):
+             stream: str = "batch", slots: int = 0,
+             workers: int = 1, evict: str = "oldest", paged: bool = False,
+             page_size: int = 0, pool_pages: int = 0, horizon: int = 0,
+             priorities: Optional[np.ndarray] = None, prefill_meshes=None):
     """prompts: (B, S0) int32, right-padded when ragged. Greedy (or
     sampled) decode of ``max_new`` tokens per row.
 
@@ -208,23 +303,44 @@ def generate(cfg, params, prompts: np.ndarray, max_new: int = 16,
     size, 0 = one per request) with the next slice's wire transfer
     double-buffered behind the current decode steps — see
     :func:`_generate_slots`.
+
+    ``workers > 1`` or ``paged=True`` routes through the fan-in engine
+    (:func:`_generate_fanin`): ``workers`` prefill workers (optionally on
+    their own meshes via ``prefill_meshes``) feed the slot table through
+    the admission arbiter; ``evict`` picks the preemption policy,
+    ``priorities`` (B,) assigns admission classes (0 = most urgent), and
+    ``paged``/``page_size``/``pool_pages`` swap in the paged slot cache.
+    ``horizon`` caps the decode horizon in positions (0 = sized to fit):
+    an unpaged request that cannot fit is refused loudly, never silently
+    truncated; a paged one admits.
     """
     if stream not in STREAMS:
         raise ValueError(f"unknown stream {stream!r}; "
                          f"expected one of {STREAMS}")
+    if workers > 1 or paged or prefill_meshes is not None:
+        return _generate_fanin(
+            cfg, params, prompts, max_new=max_new, temperature=temperature,
+            seed=seed, prompt_lens=prompt_lens, mesh=mesh, rules=rules,
+            act_transport=act_transport, decode_mesh=decode_mesh,
+            decode_rules=decode_rules, cache_transfer=cache_transfer,
+            kv_storage=kv_storage, slots=slots, workers=workers,
+            evict=evict, paged=paged, page_size=page_size,
+            pool_pages=pool_pages, horizon=horizon, priorities=priorities,
+            prefill_meshes=prefill_meshes)
     if stream == "slots":
         return _generate_slots(
             cfg, params, prompts, max_new=max_new, temperature=temperature,
             seed=seed, prompt_lens=prompt_lens, mesh=mesh, rules=rules,
             act_transport=act_transport, decode_mesh=decode_mesh,
             decode_rules=decode_rules, cache_transfer=cache_transfer,
-            kv_storage=kv_storage, slots=slots)
+            kv_storage=kv_storage, slots=slots, horizon=horizon)
     b, s0 = prompts.shape
     total = s0 + max_new
     ragged = prompt_lens is not None
     lens = np.asarray(prompt_lens, np.int32) if ragged else None
+    _check_prompt_lens(cfg, lens if ragged else np.full((b,), s0, np.int32),
+                       b, s0, max_new, int(horizon) or total, paged=False)
     if ragged:
-        assert lens.shape == (b,) and (lens >= 1).all() and (lens <= s0).all()
         # Ragged masking is only sound for full (slot == position) caches:
         # ring buffers alias a padded position's junk slot to an in-window
         # position before the row overwrites it, and SSM/xLSTM recurrent
@@ -383,7 +499,8 @@ def _generate_slots(cfg, params, prompts: np.ndarray, max_new: int,
                     prompt_lens: Optional[np.ndarray],
                     mesh, rules, act_transport: str,
                     decode_mesh, decode_rules,
-                    cache_transfer: str, kv_storage: str, slots: int):
+                    cache_transfer: str, kv_storage: str, slots: int,
+                    horizon: int = 0):
     """Continuous cross-batch disaggregation: prefill streams each
     finished request's cache slice into a RUNNING decode batch.
 
@@ -410,10 +527,10 @@ StateStore` row write), and the slot decodes from the request's own
     mesh).
     """
     b, s0 = prompts.shape
-    total = s0 + max_new
+    total = int(horizon) if horizon else s0 + max_new
     lens = np.asarray(prompt_lens, np.int32) if prompt_lens is not None \
         else np.full((b,), s0, np.int32)
-    assert lens.shape == (b,) and (lens >= 1).all() and (lens <= s0).all()
+    _check_prompt_lens(cfg, lens, b, s0, max_new, total, paged=False)
     # fail before any compile: quantized storage refuses recurrent
     # caches; make_slot_admit_step re-checks for direct callers
     _require_slot_streaming(cfg)
@@ -595,6 +712,420 @@ StateStore` row write), and the slot decodes from the request's own
     return np.asarray(out_tokens, np.int32)
 
 
+def _generate_fanin(cfg, params, prompts: np.ndarray, max_new: int,
+                    temperature: float, seed: int,
+                    prompt_lens: Optional[np.ndarray],
+                    mesh, rules, act_transport: str,
+                    decode_mesh, decode_rules,
+                    cache_transfer: str, kv_storage: str, slots: int,
+                    workers: int, evict: str, paged: bool, page_size: int,
+                    pool_pages: int, horizon: int,
+                    priorities: Optional[np.ndarray], prefill_meshes):
+    """Multi-prefill-worker fan-in with slot preemption and an optional
+    paged slot cache.
+
+    ``workers`` prefill workers — each the slot streamer's prefill +
+    double-buffered mover, on its own mesh when ``prefill_meshes`` gives
+    one per worker — feed ONE decode slot table. Admission order is
+    owned by :class:`repro.dist.fanin.AdmissionArbiter` (FIFO with
+    priority classes, aging + hard promotion, per-worker in-flight
+    accounting); the engine *blocks on the arbiter's chosen shipment*
+    rather than admitting whichever worker finishes first, so the token
+    stream is replayable under permuted worker completion order.
+
+    Preemption is recompute-style: when the table is full and the
+    pending request outranks a victim (or has hit the hard promotion
+    bound), the victim's slot is freed, and the victim requeues with its
+    already-emitted tokens appended to its prompt and ``max_new``
+    reduced by them. Readmission prefills the extended prompt at its
+    exact length — the first readmitted token comes from the prefill's
+    last-position logits — so the greedy continuation is bit-identical
+    to an uncontended run (the parity ``tests/test_serve_fanin.py``
+    pins).
+
+    ``paged=True`` stores the slot table as a
+    :class:`repro.models.registry.PagedStateStore`: admission allocates
+    and ships only the pages covering the request's live positions, a
+    fresh page is allocated (host-side) whenever a slot decodes across a
+    page boundary, and each decode step runs the *unchanged* dense step
+    bracketed by the store's gather/scatter through the page table —
+    greedy tokens bit-match the unpaged path. The page size comes from
+    the tuned ``paged_attn`` registry point unless ``page_size`` pins
+    it; ``pool_pages`` bounds the shared pool (0 = fully backed), and
+    exhausting it is a loud error, never a stall. Long requests that an
+    unpaged horizon would refuse admit here — the horizon grows to the
+    next page multiple that fits the longest request.
+
+    Greedy only: an evicted request re-prefills its emitted tokens, and
+    a sampled continuation across that recompute is not replayable.
+    """
+    if temperature > 0:
+        raise ValueError(
+            "fan-in serving is greedy-only: an evicted request re-prefills "
+            "its emitted tokens on readmission, and a sampled continuation "
+            "across that recompute is not replayable; use temperature=0 "
+            "(the single-worker paths support sampling)")
+    if evict not in fanin.EVICTION_POLICIES:
+        raise ValueError(f"unknown eviction policy {evict!r}; "
+                         f"expected one of {fanin.EVICTION_POLICIES}")
+    if workers < 1:
+        raise ValueError(f"need at least one prefill worker, got {workers}")
+    if cache_transfer not in collectives.CACHE_TRANSFERS:
+        raise ValueError(f"unknown cache_transfer {cache_transfer!r}; "
+                         f"expected one of {collectives.CACHE_TRANSFERS}")
+    b, s0 = prompts.shape
+    lens = np.asarray(prompt_lens, np.int32) if prompt_lens is not None \
+        else np.full((b,), s0, np.int32)
+    _require_slot_streaming(cfg)
+    caps = registry.capabilities(cfg)
+    prios = np.zeros((b,), np.int32) if priorities is None \
+        else np.asarray(priorities, np.int32)
+    if prios.shape != (b,):
+        raise ValueError(f"priorities shape {tuple(prios.shape)} does not "
+                         f"match the batch ({b},)")
+    classes = int(prios.max()) + 1 if b else 1
+    n_slots = int(slots) if slots else b
+    if n_slots < 1:
+        raise ValueError(f"slot table needs at least one slot, got {slots}")
+
+    # ---- horizon / page sizing -----------------------------------------
+    if paged:
+        # the horizon never caps a paged table — it grows to the longest
+        # request (that is the bugfix's "--paged admits it" arm)
+        base = max(int(horizon), int((lens + max_new).max()))
+        P = int(page_size) or _default_page(base)
+        if P < 1:
+            raise ValueError(f"page size must be >= 1, got {P}")
+        total = -(-base // P) * P        # next page multiple that fits
+        _check_prompt_lens(cfg, lens, b, s0, max_new, total, paged=True)
+    else:
+        P = 0
+        total = int(horizon) if horizon else s0 + max_new
+        _check_prompt_lens(cfg, lens, b, s0, max_new, total, paged=False)
+
+    disagg = decode_mesh is not None
+    if prefill_meshes is not None:
+        prefill_meshes = list(prefill_meshes)
+        if len(prefill_meshes) != workers:
+            raise ValueError(
+                f"{len(prefill_meshes)} prefill meshes for {workers} "
+                f"workers: fan-in needs one mesh per worker (or none)")
+        if mesh is None:
+            mesh = prefill_meshes[0]
+    else:
+        prefill_meshes = [mesh] * workers
+    if disagg and mesh is None:
+        raise ValueError("disaggregated serving (decode_mesh=...) needs a "
+                         "prefill mesh too")
+    if mesh is not None and rules is None:
+        rules = shd.PRESETS["serve_sp"]
+    if disagg and decode_rules is None:
+        decode_rules = shd.PRESETS["serve_decode"]
+    dec_mesh = decode_mesh if disagg else mesh
+    dec_rules = decode_rules if disagg else rules
+
+    prefill_fn = step_lib.make_prefill_step(cfg, act_transport)
+    dec_act = "bf16" if disagg and dec_rules is shd.PRESETS["serve_decode"] \
+        else act_transport
+    decode_fn = step_lib.make_decode_step(cfg, total, dec_act, kv_storage)
+
+    pre_ctx = [shd.axis_rules(m, rules) if m is not None
+               else contextlib.nullcontext() for m in prefill_meshes]
+    dec_ctx = shd.axis_rules(dec_mesh, dec_rules) if dec_mesh is not None \
+        else contextlib.nullcontext()
+
+    # ---- params: one placement per distinct prefill mesh ----------------
+    params_pre = [params] * workers
+    placed = {}
+    for w, m in enumerate(prefill_meshes):
+        if m is None:
+            continue
+        if id(m) not in placed:
+            p_shard = shd.tree_shardings(transformer.abstract_params(cfg),
+                                         transformer.param_axes(cfg),
+                                         m, rules)
+            placed[id(m)] = jax.device_put(params, p_shard)
+        params_pre[w] = placed[id(m)]
+    # One jit per DISTINCT worker mesh: ``constrain`` bakes the trace-time
+    # mesh into the jaxpr and jit reuses traces by aval alone, so a shared
+    # jit would replay worker 0's sharding constraints on worker 1's
+    # devices (incompatible-devices error on the first cross-worker call).
+    _prefill_jits = {}
+
+    def prefill_for(w):
+        k = id(prefill_meshes[w])
+        if k not in _prefill_jits:
+            # a DISTINCT callable per mesh, not just a distinct jit
+            # wrapper: pjit's trace cache is keyed on the wrapped
+            # function object, so jitting the same fn twice would still
+            # share the first worker's jaxpr
+            _prefill_jits[k] = jax.jit(
+                lambda p, batch, _f=prefill_fn: _f(p, batch))
+        return _prefill_jits[k]
+
+    # per-slice-width jits: fit (pre side) and mover (cross-mesh); paged
+    # admissions ship ceil(len / page) pages, so the width varies
+    fit_jits, mover_jits = {}, {}
+
+    def fit(width):
+        if width not in fit_jits:
+            abs_w = transformer.abstract_cache(cfg, 1, width)
+            fit_jits[width] = jax.jit(lambda c, a=abs_w: fit_cache(c, a))
+        return fit_jits[width]
+
+    def mover(width):
+        if width not in mover_jits:
+            abs_w = transformer.abstract_cache(cfg, 1, width)
+            dst = shd.tree_shardings(abs_w,
+                                     transformer.cache_axes(cfg, 1, width),
+                                     dec_mesh, dec_rules)
+            mover_jits[width] = make_cache_mover(
+                cfg, 1, width, dec_mesh, dec_rules, cache_transfer, dst)
+        return mover_jits[width]
+
+    # ---- decode-side programs: slot table (dense or paged) --------------
+    with dec_ctx:
+        c_shard = None
+        params_dec = params_pre[0]
+        if disagg:
+            p_shard_dec = shd.tree_shardings(
+                transformer.abstract_params(cfg),
+                transformer.param_axes(cfg), dec_mesh, dec_rules)
+            params_dec = jax.device_put(params, p_shard_dec)
+        admit_transfer = "bf16" if disagg else cache_transfer
+        if paged:
+            store = registry.paged_state_store(
+                cfg, n_slots, total, kv_storage=kv_storage, page=P,
+                pool_pages=int(pool_pages))
+            store_abs = store.abstract_state()
+            if dec_mesh is not None:
+                c_shard = shd.tree_shardings(store_abs, store.state_axes(),
+                                             dec_mesh, dec_rules)
+
+            def admit_fn(cache, slc, page_idx):
+                return store.admit_pages(cache, slc, page_idx,
+                                         transfer=admit_transfer)
+
+            def paged_step(p, pool, pt, batch):
+                dense = store.gather_dense(pool, pt)
+                logits, dense = decode_fn(p, dense, batch)
+                return logits, store.scatter_dense(pool, dense, pt)
+
+            admit = jax.jit(admit_fn, out_shardings=c_shard)
+            decode = jax.jit(paged_step, out_shardings=(None, c_shard)) \
+                if c_shard is not None else jax.jit(paged_step)
+        else:
+            store = registry.state_store(cfg, n_slots, total,
+                                         kv_storage=kv_storage)
+            store_abs = transformer.abstract_cache(cfg, n_slots, total,
+                                                   kv_storage=kv_storage)
+            if dec_mesh is not None:
+                c_shard = shd.tree_shardings(
+                    store_abs,
+                    transformer.cache_axes(cfg, n_slots, total,
+                                           kv_storage=kv_storage),
+                    dec_mesh, dec_rules)
+            admit = jax.jit(make_slot_admit_step(
+                cfg, n_slots, total, admit_transfer, kv_storage),
+                out_shardings=c_shard)
+            decode = jax.jit(decode_fn, out_shardings=(None, c_shard)) \
+                if c_shard is not None else jax.jit(decode_fn)
+        cache = jax.jit(lambda: jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), store_abs),
+            out_shardings=c_shard)()
+
+    # ---- host state: queue, slot table, page table ----------------------
+    arb = fanin.AdmissionArbiter(workers=workers, classes=classes)
+    base_prompts = [np.asarray(prompts[i, :lens[i]], np.int32).copy()
+                    for i in range(b)]
+    for i in range(b):
+        arb.submit(fanin.Request(rid=i, prompt=base_prompts[i],
+                                 max_new=int(max_new),
+                                 priority=int(prios[i])))
+    out_tokens = [[] for _ in range(b)]
+    remaining = np.full((b,), max_new, np.int64)
+    slot_occ: list = [None] * n_slots           # fanin.Occupant or None
+    slot_reqobj: list = [None] * n_slots        # fanin.Request or None
+    slot_tok = np.zeros((n_slots,), np.int32)
+    slot_pos = np.zeros((n_slots,), np.int32)
+    shipments = {}                              # rid -> (slc, tok0, length)
+    pt = store.init_page_table() if paged else None
+    free_pages = deque(range(store.n_pool)) if paged else None
+    stats = {"admissions": 0, "evictions": 0, "requeues": 0,
+             "decode_steps": 0, "transfer_wait_s": 0.0,
+             "max_wait_passes": 0, "peak_live_pages": 0}
+
+    def alloc_page() -> int:
+        if not free_pages:
+            raise RuntimeError(
+                f"paged pool exhausted: all {store.n_pool} pages of the "
+                f"{n_slots}-slot table are live; raise --pool-pages "
+                f"(0 = fully backed: slots x pages-per-row = "
+                f"{n_slots * store.pages_per_row}) or lower --slots")
+        p = free_pages.popleft()
+        stats["peak_live_pages"] = max(stats["peak_live_pages"],
+                                       store.n_pool - len(free_pages))
+        return p
+
+    def free_row(s):
+        if paged:
+            for pg in np.nonzero(pt[s] >= 0)[0]:
+                free_pages.append(int(pt[s, pg]))
+            pt[s, :] = -1
+        slot_occ[s] = None
+        slot_reqobj[s] = None
+
+    def ensure_page(s, pos):
+        """Allocate the page holding ``pos`` before the slot writes it."""
+        pg = pos // P
+        if pg >= store.pages_per_row:
+            raise RuntimeError(
+                f"slot {s} at position {pos} is past the {total}-position "
+                f"paged horizon — engine accounting bug")
+        if pt[s, pg] < 0:
+            pt[s, pg] = alloc_page()
+
+    def dispatch(req):
+        """Prefill + ship one assigned request on its worker (async): the
+        wire transfer overlaps decode steps until the arbiter admits it."""
+        plen = int(req.prompt.shape[0])
+        w = req.worker
+        with pre_ctx[w]:
+            if req.evictions == 0 and not caps.row_state and plen <= s0:
+                # fresh admission: padded [1, S0] prefill with a last
+                # position — the same program for every fresh request
+                toks = np.zeros((1, s0), np.int32)
+                toks[0, :plen] = req.prompt
+                logits, c = prefill_for(w)(params_pre[w], {
+                    "tokens": jnp.asarray(toks),
+                    "last_pos": jnp.asarray([plen - 1])})
+            else:
+                # readmission (or row_state): exact-length prefill of the
+                # extended prompt — pad tokens must never enter row state,
+                # and the recompute must replay the emitted continuation
+                logits, c = prefill_for(w)(params_pre[w], {
+                    "tokens": jnp.asarray(req.prompt[None, :])})
+            width = -(-plen // P) * P if paged else total
+            slc = fit(width)(c)
+            tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+        if disagg:
+            slc = mover(width)(slc)
+        shipments[req.rid] = (slc, tok0, plen)
+
+    def emit(i, t, s):
+        out_tokens[i].append(int(t))
+        remaining[i] -= 1
+        if remaining[i] <= 0:
+            free_row(s)
+
+    def evict_slot(s):
+        req = slot_reqobj[s]
+        arb.evicted(req)
+        # recompute preemption: requeue with the emitted tokens appended,
+        # budget reduced by them; aging restarts for the new occupancy
+        req.prompt = np.concatenate(
+            [base_prompts[req.rid],
+             np.asarray(out_tokens[req.rid], np.int32)])
+        req.max_new = int(remaining[req.rid])
+        free_row(s)
+        arb.submit(req, requeue=True)
+        stats["evictions"] += 1
+        stats["requeues"] += 1
+
+    def admit_into(s, req):
+        nonlocal cache
+        slc, tok0, plen = shipments.pop(req.rid)
+        t0 = time.time()
+        jax.block_until_ready(slc)   # the arbiter's choice, NOT first-done
+        stats["transfer_wait_s"] += time.time() - t0
+        occ = arb.admit(req)
+        stats["max_wait_passes"] = max(stats["max_wait_passes"], req.skips)
+        with dec_ctx:
+            if paged:
+                n_ship = -(-plen // P)
+                idx = np.asarray([alloc_page() for _ in range(n_ship)],
+                                 np.int32)
+                pt[s, :n_ship] = idx
+                cache = admit(cache, slc, jnp.asarray(idx))
+            else:
+                cache = admit(cache, slc, jnp.asarray(s, jnp.int32))
+        stats["admissions"] += 1
+        slot_occ[s] = occ
+        slot_reqobj[s] = req
+        slot_pos[s] = plen
+        slot_tok[s] = int(np.asarray(tok0)[0])
+        emit(req.rid, slot_tok[s], s)           # the prefill token
+
+    def try_admissions():
+        while True:
+            req = arb.next_admission()
+            if req is None:
+                return
+            s = next((i for i in range(n_slots) if slot_occ[i] is None),
+                     None)
+            if s is None:
+                s = arb.pick_victim(slot_occ, evict, req)
+                if s is None:
+                    return              # no justified victim: age in queue
+                evict_slot(s)
+            admit_into(s, req)
+
+    # ---- main loop: assign -> admit -> age -> decode --------------------
+    passes = 0
+    limit = 1000 + 20 * b * (max_new + n_slots + arb.promotion_cycles)
+    while True:
+        passes += 1
+        if passes > limit:
+            raise RuntimeError(
+                f"fan-in engine made no progress in {limit} passes "
+                f"(queue={len(arb.queue)}, "
+                f"occupied={sum(o is not None for o in slot_occ)})")
+        for req in arb.assign():
+            dispatch(req)
+        try_admissions()
+        arb.age()
+        if all(o is None for o in slot_occ):
+            if not arb.queue:
+                break
+            continue
+        if paged:
+            for s in range(n_slots):
+                if slot_occ[s] is not None:
+                    ensure_page(s, int(slot_pos[s]))
+        tok = jnp.asarray(slot_tok[:, None])
+        pos = jnp.asarray(slot_pos)
+        with dec_ctx:
+            if paged:
+                logits, cache = decode(params_dec, cache, jnp.asarray(pt),
+                                       {"tokens": tok, "pos": pos})
+            else:
+                logits, cache = decode(params_dec, cache,
+                                       {"tokens": tok, "pos": pos})
+        stats["decode_steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for s in range(n_slots):
+            if slot_occ[s] is None:
+                continue
+            slot_tok[s] = int(nxt[s])
+            slot_pos[s] += 1
+            emit(slot_reqobj[s].rid, int(nxt[s]), s)
+
+    bad = [i for i in range(b) if len(out_tokens[i]) != max_new]
+    if bad:
+        raise RuntimeError(f"fan-in engine dropped requests {bad}: "
+                           f"emitted {[len(out_tokens[i]) for i in bad]} "
+                           f"of {max_new} tokens")
+    if paged:
+        stats["page"] = P
+        stats["hbm_bytes_per_slot"] = (stats["peak_live_pages"]
+                                       * store.page_bytes()) // n_slots
+        dense = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                    for l in store.dense_abstract_state().values())
+        stats["dense_hbm_bytes_per_slot"] = dense // n_slots
+    _generate_fanin.last_stats = stats          # launcher reporting hook
+    return np.asarray(out_tokens, np.int32)
+
+
 def _pick_tp(n_devices: int, cfg) -> int:
     """Largest model-parallel degree (<= 2) the device count and head
     counts admit — the smoke default; override with --tp."""
@@ -628,6 +1159,45 @@ def make_disagg_meshes(cfg, tp_prefill: int = 0, tp_decode: int = 0):
         arr = np.array(ds).reshape(len(ds) // tp, tp)
         return jax.sharding.Mesh(arr, ("data", "model"))
     return mk(pre, tp_prefill), mk(dec, tp_decode)
+
+
+def make_fanin_meshes(cfg, workers: int, tp_prefill: int = 0,
+                      tp_decode: int = 0):
+    """Split the local devices into ``workers`` prefill-worker meshes plus
+    one decode mesh.
+
+    The decode half mirrors :func:`make_disagg_meshes`; the prefill half
+    is divided evenly among the workers (each an independent
+    ``(data, model)`` mesh — N real prefill clusters) when its device
+    count allows, and shared by every worker otherwise (the workers are
+    then concurrency lanes on one mesh — degenerate, but it runs
+    anywhere and still exercises the admission arbiter). Returns
+    ``(prefill_meshes, decode_mesh)`` with ``len(prefill_meshes) ==
+    workers``.
+    """
+    if workers < 1:
+        raise ValueError(f"need at least one prefill worker, got {workers}")
+    devs = jax.devices()
+    n = len(devs)
+    pre, dec = (devs[:n // 2], devs[n // 2:]) if n >= 2 else (devs, devs)
+    if len(pre) >= workers and len(pre) % workers == 0:
+        chunk = len(pre) // workers
+        groups = [pre[w * chunk:(w + 1) * chunk] for w in range(workers)]
+    else:
+        groups = [list(pre)] * workers
+
+    def mk(ds, tp):
+        tp = tp or _pick_tp(len(ds), cfg)
+        if len(ds) % tp != 0:
+            raise ValueError(
+                f"model-parallel degree {tp} does not divide the "
+                f"{len(ds)}-device mesh: fan-in gives each of the "
+                f"{workers} prefill workers {len(groups[0])} and decode "
+                f"{len(dec)} of the {n} devices, so --tp must divide "
+                f"those")
+        arr = np.array(ds).reshape(len(ds) // tp, tp)
+        return jax.sharding.Mesh(arr, ("data", "model"))
+    return [mk(g, tp_prefill) for g in groups], mk(dec, tp_decode)
 
 
 def disagg_decode_report(cfg, batch: int, seq_len: int, mesh,
@@ -829,6 +1399,137 @@ def disagg_decode_report(cfg, batch: int, seq_len: int, mesh,
             "hide_steps": hide_steps, "tuned": tuned}
 
 
+def fanin_report(cfg, batch: int, seq_len: int, *, workers: int = 2,
+                 slots: int = 0, classes: int = 2, evict: str = "priority",
+                 max_new: int = 0, decode_step_s: float = 0.0,
+                 transfer_s: float = 0.0, page: int = 0,
+                 kv_storage: str = "bf16"):
+    """Deterministic fan-in roofline: drive the REAL
+    :class:`repro.dist.fanin.AdmissionArbiter` through a contended
+    serving trace and price the outcome with the disagg report's
+    per-step costs. No wall clock, no jax — the same inputs always
+    produce the same report (the determinism ``tests/test_serve_fanin.py``
+    pins), so the keys gate in ``scripts/bench_diff.py``.
+
+    ``batch`` requests with a seeded mixed-length spread and round-robin
+    priority classes contend for a ``slots``-row table (default
+    ``batch // 2`` — contention by construction) fed by ``workers``
+    prefill workers; each simulated cycle is one decode step of cost
+    ``decode_step_s``, and a dispatched prefill+transfer costs
+    ``transfer_s``, double-buffered behind the queue wait. Reported
+    (all flattened into decode dryrun cells' roofline):
+
+    * ``fanin_admission_wait_s`` — mean per-admission latency: queue
+      wait (arbiter passes lost x decode step) plus the transfer time
+      the overlap failed to hide;
+    * ``fanin_evictions`` — preemptions the policy performed (each costs
+      a re-prefill of the extended prompt);
+    * ``paged_hbm_bytes_per_slot`` vs ``slot_hbm_bytes_per_slot`` — the
+      paged table's live-page resident rent per slot against the dense
+      pad-to-horizon baseline (only for families with the ``paged``
+      capability; refusals land in ``skipped`` like every other gated
+      leg).
+    """
+    max_new = int(max_new) or max(1, seq_len // 8)
+    n_slots = int(slots) or max(1, batch // 2)
+    rng = np.random.RandomState(0)
+    lens = rng.randint(max(1, seq_len // 4), seq_len + 1,
+                       size=(batch,)).astype(np.int64)
+
+    arb = fanin.AdmissionArbiter(workers=workers, classes=classes)
+    reqs = [fanin.Request(rid=i, prompt=np.zeros((int(lens[i]),), np.int32),
+                          max_new=max_new, priority=int(i % classes))
+            for i in range(batch)]
+    for r in reqs:
+        arb.submit(r)
+    remaining = {r.rid: max_new for r in reqs}
+    emitted = {r.rid: 0 for r in reqs}
+    occ: list = [None] * n_slots
+    occ_req: list = [None] * n_slots
+    wait_s: list = []
+    cycles = 0
+    limit = 1000 + 20 * batch * (max_new + n_slots + arb.promotion_cycles)
+
+    def free_row(s):
+        occ[s] = None
+        occ_req[s] = None
+
+    while True:
+        arb.assign()
+        while True:
+            req = arb.next_admission()
+            if req is None:
+                break
+            s = next((i for i in range(n_slots) if occ[i] is None), None)
+            if s is None:
+                s = arb.pick_victim(occ, evict, req)
+                if s is None:
+                    break
+                victim = occ_req[s]
+                arb.evicted(victim)
+                victim.prompt = np.zeros(
+                    (int(lens[victim.rid]) + emitted[victim.rid],),
+                    np.int32)
+                victim.max_new = remaining[victim.rid]
+                free_row(s)
+                arb.submit(victim, requeue=True)
+            queue_wait = req.skips * decode_step_s
+            wait_s.append(queue_wait + max(0.0, transfer_s - queue_wait))
+            o = arb.admit(req)
+            occ[s] = o
+            occ_req[s] = req
+            emitted[req.rid] += 1       # the prefill token
+            remaining[req.rid] -= 1
+            if remaining[req.rid] <= 0:
+                free_row(s)
+        arb.age()
+        if all(o_ is None for o_ in occ):
+            if not arb.queue:
+                break
+            continue
+        cycles += 1                     # one decode step over the table
+        for s in range(n_slots):
+            r = occ_req[s]
+            if r is None:
+                continue
+            emitted[r.rid] += 1
+            remaining[r.rid] -= 1
+            if remaining[r.rid] <= 0:
+                free_row(s)
+        if cycles > limit:
+            raise RuntimeError("fan-in report simulation made no progress")
+
+    rep = {"workers": workers, "slots": n_slots, "classes": classes,
+           "evict": evict, "decode_cycles": cycles,
+           "fanin_admission_wait_s":
+               float(np.mean(wait_s)) if wait_s else 0.0,
+           "fanin_evictions": int(arb.stats["evictions"]),
+           "max_wait_passes": int(arb.stats["max_wait"]),
+           "skipped": {}}
+
+    caps = registry.capabilities(cfg)
+    if caps.paged:
+        base = seq_len + max_new
+        P = int(page) or _default_page(base)
+        total = -(-base // P) * P
+        store = registry.paged_state_store(cfg, n_slots, total,
+                                           kv_storage=kv_storage, page=P)
+        per_pos = store.page_bytes() / P
+        live = np.minimum(lens + max_new, total)
+        paged_bytes = float(np.mean(-(-live // P) * P * per_pos))
+        dense = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                    for l in store.dense_abstract_state().values())
+        rep["page"] = P
+        rep["paged_hbm_bytes_per_slot"] = paged_bytes
+        rep["slot_hbm_bytes_per_slot"] = float(dense / n_slots)
+    else:
+        try:
+            registry.require(cfg, "paged", "--paged")
+        except NotImplementedError as e:
+            rep["skipped"]["--paged"] = str(e)
+    return rep
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b")
@@ -870,6 +1571,42 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--slots", type=int, default=0,
                     help="slot-table size for --stream slots (0 = one "
                          "slot per request; smaller forces slot reuse)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="prefill fan-in: N independent prefill workers "
+                         "feeding one decode slot table through the "
+                         "admission arbiter (>1, or --paged, routes "
+                         "serving through the fan-in engine; greedy only)")
+    ap.add_argument("--evict", default="oldest",
+                    choices=list(fanin.EVICTION_POLICIES),
+                    help="slot preemption policy when the table is full "
+                         "and a pending request outranks an occupant (or "
+                         "hit the starvation promotion bound): the victim "
+                         "requeues with its emitted tokens and is "
+                         "re-prefilled on readmission (recompute "
+                         "preemption)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged slot cache: slot rows are lists of "
+                         "fixed-size pages in a shared pool with a "
+                         "per-slot page table; admission ships only live "
+                         "pages, pages allocate on demand, and requests "
+                         "the unpaged horizon would refuse admit")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="positions per page for --paged (0 = the tuned "
+                         "paged_attn registry point, default 256)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="page-pool size backing the paged table (0 = "
+                         "fully backed: slots x pages-per-row); "
+                         "exhausting it is a loud error, never a stall")
+    ap.add_argument("--horizon", type=int, default=0,
+                    help="decode horizon in positions (0 = prompt-len + "
+                         "max-new); an unpaged request that cannot fit "
+                         "is refused loudly, never silently truncated — "
+                         "--paged admits it instead")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="admission priority classes for the fan-in "
+                         "arbiter, round-robin assigned to the smoke "
+                         "batch (0 = most urgent; with >1, --evict "
+                         "priority preempts lower classes)")
     return ap
 
 
@@ -885,9 +1622,16 @@ def main(argv=None) -> None:
     if not cfg.supports_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; no decode serving")
 
+    fan_in = args.workers > 1 or args.paged
+    prefill_meshes = None
     decode_mesh = decode_rules = None
     if args.disagg:
-        mesh, decode_mesh = make_disagg_meshes(cfg, args.tp, args.tp)
+        if fan_in:
+            prefill_meshes, decode_mesh = make_fanin_meshes(
+                cfg, max(1, args.workers), args.tp, args.tp)
+            mesh = prefill_meshes[0]
+        else:
+            mesh, decode_mesh = make_disagg_meshes(cfg, args.tp, args.tp)
         rules = shd.PRESETS[args.preset]
         decode_rules = shd.PRESETS["serve_decode"]
     else:
@@ -905,6 +1649,11 @@ def main(argv=None) -> None:
         lens = rng.randint(max(1, args.prompt_len // 2), args.prompt_len + 1,
                            size=(args.batch,)).astype(np.int32)
 
+    prios = None
+    if args.priority_classes > 1:
+        prios = (np.arange(args.batch)
+                 % args.priority_classes).astype(np.int32)
+
     t0 = time.time()
     out = generate(cfg, params, prompts, max_new=args.max_new,
                    temperature=args.temperature, prompt_lens=lens,
@@ -912,7 +1661,11 @@ def main(argv=None) -> None:
                    decode_mesh=decode_mesh, decode_rules=decode_rules,
                    cache_transfer=args.cache_transfer,
                    kv_storage=args.kv_storage,
-                   stream=args.stream, slots=args.slots)
+                   stream=args.stream, slots=args.slots,
+                   workers=args.workers, evict=args.evict,
+                   paged=args.paged, page_size=args.page_size,
+                   pool_pages=args.pool_pages, horizon=args.horizon,
+                   priorities=prios, prefill_meshes=prefill_meshes)
     dt = time.time() - t0
     n_tok = out.size
     mesh_desc = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -930,7 +1683,20 @@ def main(argv=None) -> None:
           + (f" lens={lens.tolist()}" if lens is not None else ""))
     print(f"[serve] generated {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s incl. compile)")
-    if args.stream == "slots":
+    if fan_in:
+        st = _generate_fanin.last_stats
+        print(f"[serve] fan-in: workers={args.workers} evict={args.evict} "
+              f"admissions={st['admissions']} evictions={st['evictions']} "
+              f"requeues={st['requeues']} decode_steps={st['decode_steps']} "
+              f"transfer_wait_s={st['transfer_wait_s']:.3f} "
+              f"max_wait_passes={st['max_wait_passes']}")
+        if args.paged:
+            print(f"[serve] paged: page={st['page']} "
+                  f"peak_live_pages={st['peak_live_pages']} "
+                  f"hbm_bytes_per_slot={st['hbm_bytes_per_slot']} "
+                  f"(dense pad-to-horizon "
+                  f"{st['dense_hbm_bytes_per_slot']})")
+    elif args.stream == "slots":
         st = _generate_slots.last_stats
         print(f"[serve] slot stream: admissions={st['admissions']} "
               f"decode_steps={st['decode_steps']} "

@@ -65,6 +65,28 @@ def ring_update(buf: jnp.ndarray, new: jnp.ndarray, pos) -> jnp.ndarray:
     return jnp.where(hit, new.astype(buf.dtype), buf)
 
 
+def paged_decode_attention(q, k_pool, v_pool, page_table, k_positions, pos,
+                           k_scale_pool=None, v_scale_pool=None):
+    """Single-token attention reading one layer's K/V through a page table.
+
+    ``k_pool``/``v_pool`` are page pools ``(n_pool, page, Hkv, D)`` (one
+    layer of a ``registry.PagedStateStore`` state); ``page_table`` is the
+    per-row table ``(B, pages_per_row)`` with -1 marking unallocated
+    pages. The pools are gathered back to the dense per-row layout and
+    handed to :func:`repro.models.common.decode_attention` unchanged, so
+    the paged read is bit-identical to the dense one: junk gathered from
+    unallocated (-1 -> clamped) entries sits at positions the
+    ``k_positions``/``pos`` mask sends to NEG_INF before the softmax.
+    Quantized (int8) pools pass their scale pools the same way.
+    """
+    from repro.kernels.paged_attn import gather_pages
+    k = gather_pages(k_pool, page_table)
+    v = gather_pages(v_pool, page_table)
+    ks = None if k_scale_pool is None else gather_pages(k_scale_pool, page_table)
+    vs = None if v_scale_pool is None else gather_pages(v_scale_pool, page_table)
+    return decode_attention(q, k, v, k_positions, pos, ks, vs)
+
+
 # ---------------------------------------------------------------------------
 # GQA
 # ---------------------------------------------------------------------------

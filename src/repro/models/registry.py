@@ -27,6 +27,7 @@ from typing import Any, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import FAMILIES, ModelConfig, get_config, smoke_config  # noqa: F401
 from repro.dist import collectives
@@ -60,15 +61,22 @@ class Capabilities:
     never sees pad tokens (ring buffers alias junk slots into the
     window; recurrent scans fold pads into the state) — slot streaming
     then prefills each request at its exact length and admits the whole
-    row, instead of masking a padded slice.
+    row, instead of masking a padded slice. ``paged``: the
+    ``[slots, total]`` state table can serve as a paged pool
+    (:class:`PagedStateStore`) — sound only for full (slot == position)
+    attention caches, where junk in unallocated pages is masked by
+    per-row positions; ring buffers alias page junk into the window and
+    recurrent rows are O(1) (nothing to page).
     """
     family: str
     ragged: bool
     slot_stream: bool
     quantized_storage: bool
     row_state: bool
+    paged: bool
     why_ragged: str = ""
     why_storage: str = ""
+    why_paged: str = ""
 
 
 _WHY_RAGGED_RECURRENT = (
@@ -79,13 +87,19 @@ _WHY_RAGGED_RECURRENT = (
 _WHY_STORAGE_RECURRENT = (
     "recurrent state leaves (ssm/xlstm) accumulate quantization error "
     "across steps; only pure-attention caches are quantized-resident")
+_WHY_PAGED = (
+    "paging assumes a full (slot == position) cache whose unallocated "
+    "pages are masked by per-row positions; ring-buffer windows alias "
+    "page junk into the window and recurrent rows are O(1) per slot — "
+    "there is nothing to page")
 
 _ATTENTION_CAPS = dict(ragged=True, slot_stream=True,
-                       quantized_storage=True, row_state=False)
+                       quantized_storage=True, row_state=False, paged=True)
 _RECURRENT_CAPS = dict(ragged=False, slot_stream=True,
-                       quantized_storage=False, row_state=True,
+                       quantized_storage=False, row_state=True, paged=False,
                        why_ragged=_WHY_RAGGED_RECURRENT,
-                       why_storage=_WHY_STORAGE_RECURRENT)
+                       why_storage=_WHY_STORAGE_RECURRENT,
+                       why_paged=_WHY_PAGED)
 
 _FAMILY_CAPS = {
     "dense": _ATTENTION_CAPS,
@@ -111,8 +125,9 @@ def capabilities(cfg_or_family: Union[ModelConfig, str]) -> Capabilities:
                          f"expected one of {tuple(_FAMILY_CAPS)}")
     base = dict(_FAMILY_CAPS[family])
     if windowed and base["ragged"]:
-        base.update(ragged=False, row_state=True,
-                    why_ragged=_WHY_RAGGED_RECURRENT)
+        base.update(ragged=False, row_state=True, paged=False,
+                    why_ragged=_WHY_RAGGED_RECURRENT,
+                    why_paged=_WHY_PAGED)
     return Capabilities(family=family, **base)
 
 
@@ -128,7 +143,8 @@ def require(cfg: ModelConfig, capability: str, flag: str) -> None:
     if getattr(caps, capability):
         return
     why = {"ragged": caps.why_ragged,
-           "quantized_storage": caps.why_storage}.get(capability, "")
+           "quantized_storage": caps.why_storage,
+           "paged": caps.why_paged}.get(capability, "")
     raise NotImplementedError(
         f"{flag} is unsupported for {cfg.name} (family={caps.family}): "
         f"missing capability {capability!r}"
@@ -297,3 +313,205 @@ def state_store(cfg: ModelConfig, rows: int, total: int,
                 kv_storage: str = "bf16") -> StateStore:
     """The StateStore for ``cfg``'s family (validates storage capability)."""
     return StateStore(cfg=cfg, rows=rows, total=total, kv_storage=kv_storage)
+
+
+# ---------------------------------------------------------------------------
+# the paged variant
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedStateStore(StateStore):
+    """Paged slot table: rows are lists of fixed-size pages in a shared
+    pool, so mixed-length requests allocate pages on demand instead of
+    padding every row to the decode horizon.
+
+    Every ``kv_seq``-carrying leaf of the dense ``[slots, total]`` layout
+    (values AND int8 scale leaves — quantization is per position, so
+    pages never straddle a scale block) is stored pool-form: the
+    ``(slots, total)`` axes become ``(n_pool, page)``, and a host-owned
+    page table ``[rows, total // page]`` of int32 pool indices (-1 =
+    unallocated) maps each slot's positions onto pool pages.
+
+    ``gather_dense``/``scatter_dense`` bracket the *unchanged* dense
+    decode step: gather reconstructs the ``[rows, total]`` view through
+    the page table (-1 clamps to page 0 — junk that per-row position
+    masks NEG_INF away before the softmax, so reconstruction is
+    bit-exact for every live position), the dense step runs, and scatter
+    writes the result back dropping unallocated entries. That bracketing
+    is why paged greedy tokens bit-match the unpaged path.
+
+    ``admit_pages`` ships only a request's LIVE pages (the paged form of
+    slot admission): a grown ``[1, n_live * page]`` bf16 slice is wired
+    (optionally int8 seq-blockwise), re-encoded into the resident
+    storage layout, and scattered at the slot's freshly allocated pool
+    pages — int8/f8 storage arms preserved.
+
+    Page allocation/free is host bookkeeping (the page table lives on
+    the host, uploaded per step); a freed slot's pages return to the
+    free list and its stale pool contents are never gathered again.
+    """
+    page: int = 256
+    pool_pages: int = 0                # 0 = fully backed
+
+    def __post_init__(self):
+        super().__post_init__()
+        require(self.cfg, "paged", "--paged")
+        if self.page < 1:
+            raise ValueError(f"page size must be >= 1, got {self.page}")
+        if self.total % self.page != 0:
+            raise ValueError(
+                f"page size {self.page} must divide the decode horizon "
+                f"{self.total} (round the horizon up or pick a divisor)")
+        if self.n_pool < self.pages_per_row:
+            raise ValueError(
+                f"pool of {self.n_pool} pages cannot back even one "
+                f"{self.pages_per_row}-page row; raise pool_pages")
+
+    @property
+    def pages_per_row(self) -> int:
+        return self.total // self.page
+
+    @property
+    def n_pool(self) -> int:
+        return self.pool_pages or self.rows * self.pages_per_row
+
+    # --- layout -----------------------------------------------------------
+    def _pool_axis(self, la) -> int:
+        la = tuple(la)
+        i = la.index("slots")
+        if i + 1 >= len(la) or la[i + 1] != "kv_seq":
+            raise NotImplementedError(
+                f"paged leaf layout {la} lacks an adjacent "
+                "(slots, kv_seq) pair")
+        if i != 1:
+            raise NotImplementedError(
+                f"paged leaf layout {la} expects (layers, slots, kv_seq, "
+                "...)")
+        return i
+
+    def dense_abstract_state(self):
+        """The ``[rows, total]`` storage layout the decode step sees."""
+        return super().abstract_state()
+
+    def dense_state_axes(self):
+        return super().state_axes()
+
+    def abstract_state(self):
+        """Pool-form ShapeDtypeStructs: (slots, total) -> (n_pool, page)."""
+        out = {}
+        for name, leaf in super().abstract_state().items():
+            i = self._pool_axis(super().state_axes()[name])
+            shape = leaf.shape[:i] + (self.n_pool, self.page) \
+                + leaf.shape[i + 2:]
+            out[name] = jax.ShapeDtypeStruct(shape, leaf.dtype)
+        return out
+
+    def state_axes(self):
+        """Pool-form logical axes: the pool-page axis is "pages" (the
+        serve presets map it to the slot table's mesh axes); positions
+        inside a page are unsharded."""
+        out = {}
+        for name, la in super().state_axes().items():
+            i = self._pool_axis(la)
+            la = tuple(la)
+            out[name] = la[:i] + ("pages", None) + la[i + 2:]
+        return out
+
+    def abstract_page_table(self):
+        return jax.ShapeDtypeStruct((self.rows, self.pages_per_row),
+                                    jnp.int32)
+
+    def init_page_table(self) -> np.ndarray:
+        """Host-owned page table, all rows unallocated."""
+        return np.full((self.rows, self.pages_per_row), -1, np.int32)
+
+    def page_bytes(self) -> int:
+        """Resident bytes one pool page costs across every leaf (all
+        layers) — the unit of the ``paged_hbm_bytes_per_slot`` metric."""
+        tot = 0
+        for leaf in self.abstract_state().values():
+            per = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+            tot += per // self.n_pool
+        return tot
+
+    # --- dense view around the unchanged decode step ----------------------
+    def gather_dense(self, state, page_table):
+        """Reconstruct the dense ``[rows, total]`` storage-layout cache by
+        reading every leaf through the page table. Unallocated entries
+        (-1) clamp to pool page 0: junk, but only at positions beyond
+        each row's live length, which decode attention masks."""
+        pt = jnp.clip(jnp.asarray(page_table, jnp.int32), 0).reshape(-1)
+        dense_axes = self.dense_state_axes()
+        out = {}
+        for name, leaf in state.items():
+            i = self._pool_axis(dense_axes[name])
+            g = jnp.take(leaf, pt, axis=i)
+            shape = leaf.shape[:i] + (self.rows, self.total) \
+                + leaf.shape[i + 2:]
+            out[name] = _shd.constrain(g.reshape(shape), *dense_axes[name])
+        return out
+
+    def scatter_dense(self, state, dense, page_table):
+        """Write a dense ``[rows, total]`` cache back into the pool;
+        entries whose page-table slot is unallocated are dropped (mapped
+        out of bounds, scatter mode "drop")."""
+        pt = jnp.asarray(page_table, jnp.int32)
+        pt = jnp.where(pt < 0, self.n_pool, pt).reshape(-1)
+        pool_axes = self.state_axes()
+        out = {}
+        for name, leaf in state.items():
+            i = self._pool_axis(self.dense_state_axes()[name])
+            pages = dense[name].reshape(
+                leaf.shape[:i] + (self.rows * self.pages_per_row, self.page)
+                + leaf.shape[i + 2:])
+            out[name] = _shd.constrain(
+                leaf.at[:, pt].set(pages.astype(leaf.dtype), mode="drop"),
+                *pool_axes[name])
+        return out
+
+    # --- paged admission --------------------------------------------------
+    def admit_pages(self, state, slc, page_idx, *, transfer: str = "bf16",
+                    block: int = collectives.ACT_BLOCK):
+        """Admit one request's live pages: ``slc`` is its grown
+        ``[1, n_live * page]`` bf16 state slice (junk beyond the prompt is
+        masked by the row's position), ``page_idx`` an ``(n_live,)``
+        int32 vector of freshly allocated pool destinations. The slice is
+        wired (``transfer="int8"``: seq-blockwise s8 chunks + scales, the
+        colocated form), re-encoded into the resident storage layout, and
+        scattered page-wise into the pool. ``page_idx`` may be traced, so
+        one compiled program serves every admission of the same page
+        count."""
+        if transfer not in collectives.CACHE_TRANSFERS:
+            raise ValueError(f"unknown cache_transfer {transfer!r}; "
+                             f"expected one of {collectives.CACHE_TRANSFERS}")
+        page_idx = jnp.asarray(page_idx, jnp.int32)
+        n_live = page_idx.shape[0]
+        live_len = n_live * self.page
+        row_axes = transformer.cache_axes(self.cfg, 1, live_len)
+        wired = {}
+        for name, leaf in slc.items():
+            la = tuple(row_axes[name])
+            if transfer == "int8" and "kv_seq" in la:
+                leaf = collectives.stream_int8(
+                    leaf, *la, seq_axis=la.index("kv_seq"), block=block)
+            wired[name] = leaf
+        store_slc = transformer.quantize_cache(wired, self.kv_storage)
+        pool_axes = self.state_axes()
+        out = {}
+        for name, leaf in state.items():
+            pages = store_slc[name].reshape(
+                leaf.shape[:1] + (n_live, self.page) + leaf.shape[3:])
+            out[name] = _shd.constrain(
+                leaf.at[:, page_idx].set(pages.astype(leaf.dtype)),
+                *pool_axes[name])
+        return out
+
+
+def paged_state_store(cfg: ModelConfig, rows: int, total: int,
+                      kv_storage: str = "bf16", page: int = 256,
+                      pool_pages: int = 0) -> PagedStateStore:
+    """The paged StateStore (validates the family's ``paged`` capability
+    and that ``page`` divides ``total``)."""
+    return PagedStateStore(cfg=cfg, rows=rows, total=total,
+                           kv_storage=kv_storage, page=page,
+                           pool_pages=pool_pages)

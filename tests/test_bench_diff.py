@@ -329,8 +329,8 @@ class TestKernelKeys:
     gated lower-is-better."""
 
     def test_kernel_keys_are_gated_lower(self):
-        for op in ("compact_pack", "flash_attn", "decode_attn", "rmsnorm",
-                   "expert_a2a"):
+        for op in ("compact_pack", "flash_attn", "decode_attn",
+                   "paged_attn", "rmsnorm", "expert_a2a"):
             assert bench_diff.METRICS[f"kernel_{op}_tuned_s"] == "lower"
         assert bench_diff.METRICS["kernel_compact_filter_s"] == "lower"
         assert bench_diff.METRICS["kernel_compact_filter_hbm_bytes"] \
@@ -393,6 +393,47 @@ class TestKernelKeys:
         rec = _kernel_rec()
         del rec["roofline"]["kernel_compact_pack_tuned_s"]
         cur = _traj(tmp_path / "cur.json", [rec])
+        assert bench_diff.main(["--current", cur, "--baseline", base]) == 1
+
+
+class TestFanInAndPagedKeys:
+    """Fan-in arbitration and paged-slot-cache keys (decode cells,
+    serve.fanin_report): admission wait, eviction count, and the paged
+    table's live-page HBM rent are all lower-is-better — the simulation
+    is seeded, so any drift is a queue-discipline or paging change."""
+
+    def test_all_new_keys_are_gated_lower(self):
+        for m in ("fanin_admission_wait_s", "fanin_evictions",
+                  "paged_hbm_bytes_per_slot"):
+            assert bench_diff.METRICS[m] == "lower"
+
+    def test_admission_wait_growth_fails(self):
+        base = [_disagg_rec(fanin_admission_wait_s=0.010)]
+        cur = [_disagg_rec(fanin_admission_wait_s=0.013)]   # +30%
+        res = bench_diff.diff_trajectories(cur, base)
+        assert [r["metric"] for r in res["regressions"]] \
+            == ["fanin_admission_wait_s"]
+
+    def test_eviction_thrash_and_paged_rent_growth_fail(self):
+        base = [_disagg_rec(fanin_evictions=4.0,
+                            paged_hbm_bytes_per_slot=10000)]
+        cur = [_disagg_rec(fanin_evictions=6.0,                # +50%
+                           paged_hbm_bytes_per_slot=13000)]    # +30%
+        res = bench_diff.diff_trajectories(cur, base)
+        assert sorted(r["metric"] for r in res["regressions"]) \
+            == ["fanin_evictions", "paged_hbm_bytes_per_slot"]
+        # fewer evictions / smaller rent never trips the gate
+        res2 = bench_diff.diff_trajectories(
+            [_disagg_rec(fanin_evictions=1.0,
+                         paged_hbm_bytes_per_slot=6000)], base)
+        assert res2["regressions"] == []
+
+    def test_lost_paged_key_fails(self, tmp_path):
+        """A paging change that stops emitting the HBM-per-slot key must
+        fail the gate, not silently drop out of it."""
+        base = _traj(tmp_path / "base.json",
+                     [_disagg_rec(paged_hbm_bytes_per_slot=10000)])
+        cur = _traj(tmp_path / "cur.json", [_disagg_rec()])
         assert bench_diff.main(["--current", cur, "--baseline", base]) == 1
 
 

@@ -1,5 +1,7 @@
 """The docs lint that tier-1 CI runs (scripts/check_docs.py): package
-README presence, relative-link resolution, and the real repo passing."""
+README presence, relative-link resolution, launcher-flag coverage of
+the serving operator's guide, gated-metric doc coverage, and the real
+repo passing all four."""
 
 import importlib.util
 import os
@@ -53,6 +55,86 @@ class TestCheckDocs:
         root = check_docs.repo_root()
         assert check_docs.missing_readmes(root) == []
         assert check_docs.broken_links(root) == []
+        assert check_docs.missing_flag_docs(root) == []
+        assert check_docs.missing_metric_docs(root) == []
         # the spine the ISSUE demands actually exists
         assert (root / "README.md").exists()
         assert (root / "src" / "repro" / "lst" / "README.md").exists()
+        assert (root / "docs" / "serving.md").exists()
+
+
+def _mk_launcher_repo(tmp_path, flags=("--batch",), doc_text=None):
+    launch = tmp_path / "src" / "repro" / "launch"
+    launch.mkdir(parents=True)
+    lines = "".join(f'    ap.add_argument("{f}", type=int)\n'
+                    for f in flags)
+    (launch / "serve.py").write_text(f"def build_parser(ap):\n{lines}")
+    if doc_text is not None:
+        (tmp_path / "docs").mkdir()
+        (tmp_path / "docs" / "serving.md").write_text(doc_text)
+    return tmp_path
+
+
+class TestFlagCoverage:
+    def test_extracted_flags_are_sorted_and_deduped(self, tmp_path):
+        root = _mk_launcher_repo(
+            tmp_path, flags=("--zeta", "--alpha", "--alpha"))
+        flags = check_docs.extract_flags(
+            root / "src" / "repro" / "launch" / "serve.py")
+        assert flags == ["--alpha", "--zeta"]
+
+    def test_missing_guide_reported(self, tmp_path):
+        root = _mk_launcher_repo(tmp_path, doc_text=None)
+        problems = check_docs.missing_flag_docs(root)
+        assert len(problems) == 1 and "docs/serving.md is missing" \
+            in problems[0]
+
+    def test_undocumented_flag_reported(self, tmp_path):
+        root = _mk_launcher_repo(tmp_path, flags=("--batch", "--paged"),
+                                 doc_text="only `--batch` is covered")
+        problems = check_docs.missing_flag_docs(root)
+        assert len(problems) == 1 and "--paged" in problems[0]
+
+    def test_documented_flags_pass(self, tmp_path):
+        root = _mk_launcher_repo(tmp_path, flags=("--batch", "--paged"),
+                                 doc_text="`--batch` and `--paged`")
+        assert check_docs.missing_flag_docs(root) == []
+
+    def test_repo_without_launchers_owes_nothing(self, tmp_path):
+        assert check_docs.missing_flag_docs(
+            _mk_repo(tmp_path, readme_for=("good", "bare"))) == []
+
+    def test_real_serve_flags_extracted(self):
+        """The regex actually sees the real launcher's argparse calls
+        (no import — serve.py pulls in jax)."""
+        root = check_docs.repo_root()
+        flags = check_docs.extract_flags(
+            root / "src" / "repro" / "launch" / "serve.py")
+        assert {"--paged", "--workers", "--evict", "--horizon",
+                "--pool-pages"} <= set(flags)
+
+
+class TestMetricCoverage:
+    def test_template_covers_concrete_keys(self):
+        rx = check_docs._template_to_regex("kernel_<op>_tuned_s")
+        assert rx.match("kernel_flash_attn_tuned_s")
+        assert rx.match("kernel_paged_attn_tuned_s")
+        assert not rx.match("kernel_flash_attn_default_s")
+        rx2 = check_docs._template_to_regex(
+            "disagg_collective_s_<transfer>x<storage>")
+        assert rx2.match("disagg_collective_s_int8xf8")
+        assert not rx2.match("disagg_collective_s_int8")
+
+    def test_repo_without_bench_diff_owes_nothing(self, tmp_path):
+        root = _mk_repo(tmp_path, readme_for=("good", "bare"))
+        assert check_docs.gated_metrics(root) == {}
+        assert check_docs.missing_metric_docs(root) == []
+
+    def test_every_gated_metric_is_documented_here(self):
+        """The real repo's METRICS dict is fully covered by the docs —
+        the check the fanin/paged keys must not regress."""
+        root = check_docs.repo_root()
+        metrics = check_docs.gated_metrics(root)
+        assert {"fanin_admission_wait_s", "fanin_evictions",
+                "paged_hbm_bytes_per_slot"} <= set(metrics)
+        assert check_docs.missing_metric_docs(root) == []

@@ -49,7 +49,7 @@ class TestRegistry:
     def test_builtin_ops_registered(self):
         names = set(api.ops())
         assert {"compact_pack", "flash_attn", "decode_attn",
-                "rmsnorm", "expert_a2a"} <= names
+                "paged_attn", "rmsnorm", "expert_a2a"} <= names
 
     def test_register_rejects_default_outside_candidates(self):
         bad = api.TunableOp(
@@ -75,8 +75,8 @@ class TestGridBitMatch:
     is a correct implementation — the tuner can only trade speed."""
 
     @pytest.mark.parametrize("name", ["compact_pack", "flash_attn",
-                                      "decode_attn", "rmsnorm",
-                                      "expert_a2a"])
+                                      "decode_attn", "paged_attn",
+                                      "rmsnorm", "expert_a2a"])
     def test_every_grid_point_matches_ref(self, name):
         op = api.get_op(name)
         args, kwargs = op.example(True)

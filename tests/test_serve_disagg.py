@@ -331,3 +331,60 @@ class TestDisaggDryrunReport:
         assert tuned["point"]["block"] in (128, 256)
         assert tuned["collective_s"] > 0
         assert tuned["evaluations"] >= 1
+
+
+class TestFanInOnMesh:
+    """The fan-in acceptance criterion on the forced 8-device mesh:
+    paged + preempted greedy tokens bit-match the unpaged uncontended
+    path, colocated AND disaggregated across per-worker prefill meshes
+    (serve.make_fanin_meshes)."""
+
+    @pytest.fixture(scope="class")
+    def fanin_meshes(self, cfg):
+        return serve.make_fanin_meshes(cfg, workers=2)
+
+    @pytest.fixture(scope="class")
+    def golden(self, cfg, mesh, setup):
+        params, prompts, lens = setup
+        return serve.generate(cfg, params, prompts, max_new=12,
+                              prompt_lens=lens, mesh=mesh)
+
+    def test_worker_meshes_partition_the_prefill_half(self, fanin_meshes):
+        pres, dec = fanin_meshes
+        assert len(pres) == 2
+        dec_ids = {d.id for d in dec.devices.flat}
+        pre_ids = [frozenset(d.id for d in m.devices.flat) for m in pres]
+        assert pre_ids[0] and pre_ids[1]
+        assert pre_ids[0].isdisjoint(pre_ids[1])
+        for ids in pre_ids:
+            assert ids.isdisjoint(dec_ids)
+
+    def test_paged_preempted_matches_colocated(self, cfg, mesh, setup,
+                                               golden):
+        """slots=3 < batch=8 forces preemption (class pressure + the
+        promotion bound); the paged, contended run bit-matches the
+        dense uncontended one."""
+        params, prompts, lens = setup
+        out = serve.generate(cfg, params, prompts, max_new=12,
+                             prompt_lens=lens, mesh=mesh, workers=2,
+                             slots=3, evict="priority", paged=True,
+                             priorities=(np.arange(8) % 2).astype(np.int32))
+        assert (out == golden).all(), (out, golden)
+        st = serve._generate_fanin.last_stats
+        assert st["evictions"] > 0
+        assert st["hbm_bytes_per_slot"] < st["dense_hbm_bytes_per_slot"]
+
+    def test_paged_preempted_matches_across_fanin_meshes(
+            self, cfg, fanin_meshes, setup, golden):
+        """Two real prefill worker meshes feeding the decode-mesh slot
+        table: live pages ship across meshes, victims re-prefill on
+        their own worker, tokens still bit-match."""
+        params, prompts, lens = setup
+        pres, dec = fanin_meshes
+        out = serve.generate(cfg, params, prompts, max_new=12,
+                             prompt_lens=lens, mesh=pres[0],
+                             prefill_meshes=pres, decode_mesh=dec,
+                             workers=2, slots=3, evict="oldest",
+                             paged=True)
+        assert (out == golden).all(), (out, golden)
+        assert serve._generate_fanin.last_stats["admissions"] >= 8
